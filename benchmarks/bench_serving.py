@@ -1,0 +1,36 @@
+"""Extra: serving-engine throughput/latency microbenchmark (edge router over
+replicas; the paper has no serving figure, so this is a framework extra)."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serving.engine import EdgeRouter, ServingEngine
+
+
+def main(fast: bool = False):
+    cfg = reduced(get_config("yi-9b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engines = [ServingEngine(model, params, slots=4, max_seq=96,
+                             name=f"r{i}") for i in range(2)]
+    router = EdgeRouter(engines)
+    rng = np.random.default_rng(0)
+    n_req = 6 if fast else 16
+    t0 = time.perf_counter()
+    futs = [router.submit(rng.integers(1, cfg.vocab_size, size=8),
+                          max_new_tokens=8) for _ in range(n_req)]
+    router.drain()
+    dt = time.perf_counter() - t0
+    toks = sum(len(f.result()) for f in futs)
+    return {"requests": n_req, "tokens": toks, "wall_s": dt,
+            "tok_per_s": toks / dt}
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

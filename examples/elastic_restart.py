@@ -1,0 +1,40 @@
+"""Elastic scaling / crash-restart: train, checkpoint asynchronously, destroy
+the VRE ("node failure"), re-instantiate (warm image cache), restore state,
+continue training — loss curve continues where it left off.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import tempfile
+
+import numpy as np
+
+import repro.core.services  # noqa: F401
+from repro.core.vre import VREConfig, VirtualResearchEnvironment
+
+workdir = tempfile.mkdtemp()
+cfg = VREConfig(name="elastic", mesh_shape=(1, 1),
+                services=["volumes", "data", "lm-trainer"],
+                arch="mamba2-370m", workdir=workdir,
+                extra={"global_batch": 4, "seq_len": 32})
+
+vre = VirtualResearchEnvironment(cfg)
+vre.instantiate()
+trainer = vre.service("lm-trainer")
+losses1 = trainer.train_steps(vre.service("data"), 6)
+vre.service("volumes").save(trainer.state, step=6, blocking=True)
+print(f"phase 1: loss {losses1[0]:.3f} -> {losses1[-1]:.3f}; checkpointed")
+
+vre.destroy()     # simulate preemption of the whole environment
+print("VRE destroyed (preempted)")
+
+vre2 = VirtualResearchEnvironment(cfg)
+rep = vre2.instantiate()
+print(f"re-instantiated in {rep.wall_s:.2f}s (warm cache)")
+t2 = vre2.service("lm-trainer")
+t2.state = vre2.service("volumes").restore(t2.state, step=6)
+losses2 = t2.train_steps(vre2.service("data"), 6)
+print(f"phase 2 (restored): loss {losses2[0]:.3f} -> {losses2[-1]:.3f}")
+assert np.isfinite(losses2[-1])
+assert losses2[0] < losses1[0] + 1.0, "restore must continue, not restart"
+vre2.destroy()
+print("OK")

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's Fig. 4 user interaction, as a library session.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+init -> apply (instantiate an on-demand VRE) -> use its services
+(train a few steps, run a tool workflow) -> destroy. Second apply is warm
+(image cache), mirroring the paper's on-demand usage pattern.
+"""
+import tempfile
+import time
+
+import numpy as np
+
+import repro.core.services  # noqa: F401 — registers the service packages
+from repro.core.vre import VREConfig, VirtualResearchEnvironment
+
+cfg = VREConfig(
+    name="quickstart",
+    mesh_shape=(1, 1),
+    services=["volumes", "data", "lm-trainer", "workflows", "dashboard"],
+    arch="yi-9b",                      # reduced on CPU automatically
+    workdir=tempfile.mkdtemp(),
+    extra={"global_batch": 4, "seq_len": 32, "workers": 4},
+)
+
+# --- kn apply ---------------------------------------------------------
+vre = VirtualResearchEnvironment(cfg)
+report = vre.instantiate()
+print(f"[apply] VRE up in {report.wall_s:.2f}s "
+      f"({report.mode}, {report.nodes} nodes)")
+print("[discovery]", vre.endpoints.entries().keys())
+
+# --- use the trainer microservice -------------------------------------
+trainer = vre.service("lm-trainer")
+losses = trainer.train_steps(vre.service("data"), 5)
+print(f"[train] 5 steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+vre.service("volumes").save(trainer.state, step=5, blocking=True)
+
+# --- run a workflow of short-lived tools (paper §5.1 pattern) ----------
+wfs = vre.service("workflows")
+wf = wfs.new("demo-analysis")
+wf.map_partitions("sumsq", lambda p: float((p ** 2).sum()),
+                  np.arange(10_000, dtype=np.float64), 8, reducer=sum)
+res = wfs.run(wf)
+print(f"[workflow] sumsq over 8 partitions = {res['sumsq:gather']:.3e}")
+print("[dashboard]", list(vre.service("dashboard").summary()["counters"])[:4])
+
+# --- destroy, then warm re-apply ---------------------------------------
+vre.destroy()
+t0 = time.perf_counter()
+vre2 = VirtualResearchEnvironment(cfg)
+vre2.instantiate()
+print(f"[re-apply] warm instantiation in {time.perf_counter()-t0:.2f}s "
+      f"(image cache hits: {vre2.image_cache.hits})")
+vre2.destroy()
+print("OK")

@@ -1,0 +1,37 @@
+"""End-to-end serving driver (the paper's kind is orchestration — serving a
+small model with batched requests through the edge router is the e2e demo).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serving.engine import EdgeRouter, ServingEngine, greedy_generate
+
+cfg = reduced(get_config("gemma2-27b"))     # local/global + rolling caches
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+
+engines = [ServingEngine(model, params, slots=3, max_seq=96, name=f"r{i}")
+           for i in range(2)]
+router = EdgeRouter(engines)
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 12)))
+           for _ in range(10)]
+t0 = time.time()
+futs = [router.submit(p, max_new_tokens=8) for p in prompts]
+router.drain()
+outs = [f.result() for f in futs]
+dt = time.time() - t0
+print(f"10 batched requests -> {sum(map(len, outs))} tokens in {dt:.1f}s")
+
+# verify one against the sequential oracle
+ref = greedy_generate(model, params, prompts[0], 8, 96)
+assert np.array_equal(outs[0], ref), "batched decode must equal the oracle"
+print("continuous-batched output == sequential oracle; metrics:",
+      router.metrics())

@@ -1,0 +1,35 @@
+"""End-to-end training driver example. Default: CPU-reduced model, quick.
+--full trains the ~110M-parameter config for a few hundred steps (sized for
+real hardware; on this 1-core container it is compute-limited).
+
+    PYTHONPATH=src python examples/train_e2e.py [--full]
+"""
+import sys
+
+from repro.launch import train
+
+if "--full" in sys.argv:
+    # ~110M params: GPT-small-scale yi-family config
+    import dataclasses
+    from repro.configs import get_config
+    import repro.configs.base as base
+    cfg = dataclasses.replace(
+        get_config("yi-9b"), num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=32000,
+        skip_shapes=())
+    print(f"full config: {cfg.param_count()/1e6:.0f}M params")
+    # register as a transient arch and run a few hundred steps
+    import repro.configs as C
+    base._MODULE_FOR["train-e2e-110m"] = None
+    import types
+    mod = types.SimpleNamespace(CONFIG=cfg)
+    import importlib
+    importlib.import_module  # (registry shortcut below)
+    C.base.get_config = lambda a, _o=C.base.get_config: (cfg if a == "train-e2e-110m" else _o(a))
+    train.main(["--arch", "train-e2e-110m", "--steps", "300",
+                "--global-batch", "8", "--seq-len", "512",
+                "--microbatches", "2"])
+else:
+    train.main(["--arch", "yi-9b", "--reduced", "--steps", "30",
+                "--global-batch", "8", "--seq-len", "64",
+                "--ckpt-every", "10"])

@@ -1,0 +1,44 @@
+"""The paper's core scenario end-to-end: an on-demand VRE running a
+multi-stage scientific pipeline (MTBLS233-style) with data-split
+parallelization, a straggling node and a node failure — the scheduler
+speculates and reschedules; the run completes with correct results.
+
+    PYTHONPATH=src python examples/workflow_pipeline.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+import repro.core.services  # noqa: F401
+from repro.core.vre import VREConfig, VirtualResearchEnvironment
+
+cfg = VREConfig(name="pipeline", mesh_shape=(1, 1),
+                services=["volumes", "workflows", "dashboard"],
+                workdir=tempfile.mkdtemp(), extra={"workers": 6})
+vre = VirtualResearchEnvironment(cfg)
+vre.instantiate()
+wfs = vre.service("workflows")
+sched = wfs.scheduler
+
+data = np.arange(3000, dtype=np.float64)
+wf = wfs.new("mtbls233-like")
+g1 = wf.map_partitions("centroid", lambda p: p * 1.0001, data, 6)
+g2 = wf.add("align", lambda parts: np.concatenate(parts), deps=[g1])
+g3 = wf.map_partitions("match", lambda p: float(np.sqrt((p ** 2).mean())),
+                       data, 6, deps=[g2], reducer=lambda r: float(np.mean(r)))
+
+# inject faults: one straggler, one dead worker
+sched.make_straggler(1, speed=0.05)
+sched.kill_worker(2)
+
+t0 = time.time()
+res = wfs.run(wf)
+print(f"pipeline done in {time.time()-t0:.2f}s; rms={res[g3]:.3f}")
+expected = float(np.mean([np.sqrt((p ** 2).mean())
+                          for p in np.array_split(data, 6)]))
+assert abs(res[g3] - expected) < 1e-9
+print("scheduler stats:", sched.stats)
+assert sched.stats["executed"] >= 14
+vre.destroy()
+print("OK — failures rescheduled, stragglers mitigated, results exact")

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: on-demand VREs with microservices,
+mapped to TPU-pod meshes. See DESIGN.md for the full layer mapping."""
+from repro.core.vre import VREConfig, VirtualResearchEnvironment  # noqa: F401
+from repro.core.registry import (GLOBAL_REGISTRY, ServiceRegistry,  # noqa: F401
+                                 ServiceSpec, register_service)
+from repro.core.workflow import Workflow  # noqa: F401
+from repro.core.scheduler import ClusterScheduler  # noqa: F401
+from repro.core.monitoring import Monitor  # noqa: F401
+from repro.core.deployment import (CentralizedDeployer,  # noqa: F401
+                                   DecentralizedDeployer, ImageCache)

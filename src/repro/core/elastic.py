@@ -1,0 +1,61 @@
+"""Elastic scaling: resize a VRE's mesh and reshard live state through the
+volume (checkpoint) service. On-demand VREs procure what they need, when
+they need it (the paper's core thesis) — growing from 1 pod to 2 mid-run is
+just: checkpoint -> destroy -> instantiate(new mesh) -> restore with the new
+shardings (the deployment image cache makes the re-instantiation cheap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class ResizeReport:
+    old_shape: tuple
+    new_shape: tuple
+    checkpoint_s: float
+    reinstantiate_s: float
+    restore_s: float
+    deployment: Optional[dict] = None
+
+
+def resize(vre, new_mesh_shape: tuple, state: Any = None,
+           reshard: Optional[Callable] = None) -> ResizeReport:
+    """reshard(state_like, new_mesh) -> restored state with new shardings.
+
+    When ``state``/``reshard`` are given, state round-trips through the
+    VRE's checkpoint store; otherwise only the services move.
+    """
+    old_shape = vre.config.mesh_shape
+    store = None
+    t0 = time.perf_counter()
+    if state is not None:
+        store = vre.service("volumes") if "volumes" in vre.services else None
+        if store is None:
+            from repro.checkpoint.store import CheckpointStore
+            store = CheckpointStore(
+                str(vre.image_cache.root.parent / "elastic_ckpt"),
+                num_servers=vre.config.storage_servers)
+        store.save(state, step=0, blocking=True)
+    t1 = time.perf_counter()
+
+    vre.destroy()
+    vre.config = dataclasses.replace(vre.config, mesh_shape=new_mesh_shape) \
+        if dataclasses.is_dataclass(vre.config) else vre.config
+    report = vre.instantiate()
+    t2 = time.perf_counter()
+
+    restored = None
+    if state is not None:
+        if reshard is not None:
+            restored = reshard(store, vre.mesh, state)
+        else:
+            restored = store.restore(state, step=0)
+    t3 = time.perf_counter()
+    return ResizeReport(old_shape, new_mesh_shape,
+                        checkpoint_s=t1 - t0,
+                        reinstantiate_s=t2 - t1,
+                        restore_s=t3 - t2,
+                        deployment=report.to_json()), restored

@@ -1,0 +1,79 @@
+"""Monitoring platform (EFK-stack analogue): structured event log + in-memory
+aggregation + timers. Every service and the scheduler emit events here;
+``summarize`` is the "Kibana dashboard" — aggregates by (service, event).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import defaultdict
+from contextlib import contextmanager
+from pathlib import Path
+from typing import Optional
+
+
+class Monitor:
+    def __init__(self, log_path: Optional[str] = None, name: str = "vre"):
+        self.name = name
+        self.log_path = Path(log_path) if log_path else None
+        if self.log_path:
+            self.log_path.parent.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+        self._events = []
+        self._counters = defaultdict(float)
+        self._timings = defaultdict(list)
+
+    def log(self, service: str, event: str, **fields):
+        rec = {"t": time.time(), "service": service, "event": event, **fields}
+        with self._lock:
+            self._events.append(rec)
+            self._counters[(service, event)] += 1
+            if self.log_path:
+                with self.log_path.open("a") as f:
+                    f.write(json.dumps(rec, default=str) + "\n")
+        return rec
+
+    def count(self, service: str, event: str, n: float = 1.0):
+        with self._lock:
+            self._counters[(service, event)] += n
+
+    @contextmanager
+    def timer(self, service: str, event: str, **fields):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self._timings[(service, event)].append(dt)
+            self.log(service, event + ".done", seconds=dt, **fields)
+
+    # -- dashboards ------------------------------------------------------
+    def counters(self) -> dict:
+        with self._lock:
+            return {f"{s}/{e}": v for (s, e), v in self._counters.items()}
+
+    def timing_summary(self) -> dict:
+        out = {}
+        with self._lock:
+            for (s, e), ts in self._timings.items():
+                ts_sorted = sorted(ts)
+                out[f"{s}/{e}"] = {
+                    "count": len(ts),
+                    "total_s": sum(ts),
+                    "mean_s": sum(ts) / len(ts),
+                    "p50_s": ts_sorted[len(ts) // 2],
+                    "max_s": ts_sorted[-1],
+                }
+        return out
+
+    def events(self, service: Optional[str] = None) -> list:
+        with self._lock:
+            evs = list(self._events)
+        if service:
+            evs = [e for e in evs if e["service"] == service]
+        return evs
+
+    def summarize(self) -> dict:
+        return {"counters": self.counters(), "timings": self.timing_summary()}

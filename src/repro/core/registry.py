@@ -1,0 +1,106 @@
+"""Microservice registry + endpoint directory.
+
+Paper mapping (§3.1.3): a community of practice composes a VRE from a set of
+independently deployable services. Here a ``ServiceSpec`` declares a named,
+independently *compilable* unit (builder returns a Service given the VRE
+context); the ``EndpointDirectory`` is the DynDNS/CDN analogue — stable names
+that re-resolve to fresh addresses every time an on-demand VRE is
+re-instantiated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Service:
+    name: str
+    kind: str
+    instance: Any                     # the live object (engine, trainer, ...)
+    endpoint: str
+    long_running: bool = True
+    started_at: float = dataclasses.field(default_factory=time.time)
+
+    def health(self) -> bool:
+        h = getattr(self.instance, "healthy", True)
+        return h() if callable(h) else bool(h)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """A deployable microservice: name + builder(ctx) -> instance."""
+    name: str
+    kind: str                         # data|train|serve|storage|monitor|workflow|tool
+    builder: Callable[["Any"], Any]
+    long_running: bool = True
+    description: str = ""
+
+
+class ServiceRegistry:
+    """Helm-repository analogue: named, versioned service packages."""
+
+    def __init__(self):
+        self._specs: Dict[str, ServiceSpec] = {}
+        self._lock = threading.Lock()
+
+    def register(self, spec: ServiceSpec, overwrite: bool = False):
+        with self._lock:
+            if spec.name in self._specs and not overwrite:
+                raise KeyError(f"service {spec.name!r} already registered")
+            self._specs[spec.name] = spec
+        return spec
+
+    def get(self, name: str) -> ServiceSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(f"unknown service {name!r}; "
+                           f"known: {sorted(self._specs)}") from None
+
+    def names(self) -> List[str]:
+        return sorted(self._specs)
+
+
+class EndpointDirectory:
+    """DynDNS analogue: stable names -> dynamically re-resolved addresses."""
+
+    def __init__(self):
+        self._entries: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+
+    def publish(self, name: str, address: str, meta: Optional[dict] = None):
+        with self._lock:
+            self._entries[name] = {"address": address,
+                                   "updated": time.time(),
+                                   "meta": meta or {}}
+
+    def resolve(self, name: str) -> str:
+        with self._lock:
+            if name not in self._entries:
+                raise KeyError(f"unresolved endpoint {name!r}")
+            return self._entries[name]["address"]
+
+    def withdraw(self, name: str):
+        with self._lock:
+            self._entries.pop(name, None)
+
+    def entries(self) -> dict:
+        with self._lock:
+            return dict(self._entries)
+
+
+GLOBAL_REGISTRY = ServiceRegistry()
+
+
+def register_service(name: str, kind: str, *, long_running: bool = True,
+                     description: str = ""):
+    """Decorator: @register_service("lm-trainer", "train")."""
+    def deco(fn):
+        GLOBAL_REGISTRY.register(ServiceSpec(
+            name=name, kind=kind, builder=fn, long_running=long_running,
+            description=description), overwrite=True)
+        return fn
+    return deco

@@ -1,0 +1,118 @@
+"""Built-in microservices (the PhenoMeNal-style 'community of practice'
+package set): data pipeline, LM trainer, serving engines + edge router,
+workflow system, volumes (checkpoint store), monitoring dashboard.
+
+Each builder returns a live instance given the VREContext; builders use the
+VRE's image cache for their expensive artifacts where possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import get_config, reduced
+from repro.core.registry import register_service
+from repro.core.scheduler import ClusterScheduler
+from repro.core.workflow import Workflow
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.models.model import build_model
+from repro.optim.adamw import OptimizerConfig
+from repro.serving.engine import EdgeRouter, ServingEngine
+from repro.training.train_step import (TrainStepConfig, init_state,
+                                       make_train_step)
+
+
+def _model_cfg(ctx):
+    arch = ctx.config.arch or "yi-9b"
+    cfg = get_config(arch)
+    if ctx.config.provider == "cpu":
+        cfg = reduced(cfg)
+    return cfg
+
+
+@register_service("volumes", "storage",
+                  description="GlusterFS analogue: sharded checkpoint store")
+def build_volumes(ctx):
+    return CheckpointStore(str(ctx.workdir / ctx.config.name / "volumes"),
+                           num_servers=ctx.config.storage_servers)
+
+
+@register_service("data", "data",
+                  description="host-sharded synthetic token pipeline")
+def build_data(ctx):
+    cfg = _model_cfg(ctx)
+    batch = int(ctx.config.extra.get("global_batch", 8))
+    seq = int(ctx.config.extra.get("seq_len", 64))
+    return SyntheticLMData(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+        embeddings_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0))
+
+
+@register_service("lm-trainer", "train",
+                  description="LM training service (train_step + state)")
+def build_trainer(ctx):
+    cfg = _model_cfg(ctx)
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(warmup_steps=2, total_steps=100)
+    mb = int(ctx.config.extra.get("microbatches", 1))
+    step_fn = make_train_step(model, cfg, opt_cfg,
+                              TrainStepConfig(microbatches=mb))
+    state, axes = init_state(model, opt_cfg, jax.random.PRNGKey(0))
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    svc = SimpleNamespace(cfg=cfg, model=model, state=state, axes=axes,
+                          step=0, history=[])
+
+    def train_steps(data, n: int):
+        it = iter(data)
+        for _ in range(n):
+            batch = jax.tree.map(jax.numpy.asarray, next(it))
+            svc.state, metrics = jit_step(svc.state, batch)
+            svc.step += 1
+            loss = float(metrics["loss"])
+            svc.history.append(loss)
+            ctx.monitor.log("lm-trainer", "step", step=svc.step, loss=loss)
+        return svc.history[-n:]
+
+    svc.train_steps = train_steps
+    svc.healthy = lambda: True
+    return svc
+
+
+@register_service("lm-server", "serve",
+                  description="serving replicas + Traefik-style edge router")
+def build_server(ctx):
+    cfg = _model_cfg(ctx)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    replicas = int(ctx.config.extra.get("replicas", 2))
+    max_seq = int(ctx.config.extra.get("max_seq", 128))
+    engines = [ServingEngine(model, params, slots=2, max_seq=max_seq,
+                             name=f"replica{i}") for i in range(replicas)]
+    return EdgeRouter(engines)
+
+
+@register_service("workflows", "workflow",
+                  description="Luigi/Pachyderm analogue: DAG tool scheduler")
+def build_workflows(ctx):
+    sched = ClusterScheduler(
+        num_workers=int(ctx.config.extra.get("workers", 4)),
+        monitor=ctx.monitor)
+
+    def new(name: str) -> Workflow:
+        return Workflow(name)
+
+    return SimpleNamespace(scheduler=sched, new=new,
+                           run=lambda wf: sched.run(wf))
+
+
+@register_service("dashboard", "monitor",
+                  description="EFK analogue: metrics aggregation")
+def build_dashboard(ctx):
+    return SimpleNamespace(summary=ctx.monitor.summarize,
+                           events=ctx.monitor.events)

@@ -1,0 +1,112 @@
+"""Host-sharded synthetic token pipeline with packing and prefetch.
+
+The paper's VREs feed containerized tools from a shared data space; the
+TPU-native analogue is a deterministic, host-partitioned token stream: every
+host derives its shard purely from (seed, host_id, num_hosts, step) — the
+same decentralized self-configuration idea as cloud-init contextualization
+(no coordinator hands out work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mean_doc_len: int = 512       # documents are packed into fixed windows
+    embeddings_dim: int = 0       # >0: emit embedding inputs (stub frontends)
+    dtype: str = "int32"
+
+
+class SyntheticLMData:
+    """Deterministic packed-LM batches, partitioned by host."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, num_hosts: int = 1):
+        assert cfg.global_batch % num_hosts == 0
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = cfg.global_batch // num_hosts
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.Generator(np.random.Philox(
+            key=self.cfg.seed, counter=[step, self.host_id, 0, 0]))
+
+    def batch(self, step: int) -> dict:
+        """Pack synthetic 'documents' (geometric lengths) into the window."""
+        c = self.cfg
+        rng = self._rng(step)
+        toks = np.empty((self.local_batch, c.seq_len + 1), np.int32)
+        for row in range(self.local_batch):
+            filled = 0
+            while filled < c.seq_len + 1:
+                doc_len = min(1 + rng.geometric(1.0 / c.mean_doc_len),
+                              c.seq_len + 1 - filled)
+                toks[row, filled:filled + doc_len] = rng.integers(
+                    1, c.vocab_size, size=doc_len)
+                filled += doc_len
+        inputs, labels = toks[:, :-1], toks[:, 1:]
+        if c.embeddings_dim:
+            emb = rng.standard_normal(
+                (self.local_batch, c.seq_len, c.embeddings_dim),
+                dtype=np.float32) * 0.02
+            return {"inputs": emb, "labels": np.ascontiguousarray(labels)}
+        return {"inputs": np.ascontiguousarray(inputs),
+                "labels": np.ascontiguousarray(labels)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-bounded)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+def device_batch(batch: dict, shardings: Optional[dict] = None) -> dict:
+    """Place a host batch onto devices with the training shardings."""
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), batch, shardings)
+
+
+def split_partitions(data: np.ndarray, n: int) -> list:
+    """The paper's tool-parallelization primitive: split a dataset into N
+    roughly-equal partitions (Fig. 5/6 use this split)."""
+    return np.array_split(data, n)

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules → PartitionSpecs, with divisibility fallbacks.
+
+Weights/caches are annotated with *logical* axis names at init time; this
+module maps them onto the production mesh:
+
+  batch        -> (pod, data)            [activations, caches]
+  embed        -> (pod, data)            [FSDP / ZeRO-3 on the d_model dim]
+  vocab/mlp/experts/d_inner/ssm_heads -> model   [tensor/expert parallel]
+  seq_kv       -> step-kind dependent (see below); long-context decode
+                  (batch=1) shards the KV/sequence over (pod, data)   [SP]
+
+Attention tensor-parallel mode is chosen **per step kind** so that no mode
+ever all-reduces an (S x S) score matrix:
+
+  "heads"    : num_heads % tp == 0 AND num_kv_heads % tp == 0
+               -> shard q and kv heads (gemma2, zamba2). No attention
+               collectives at all.
+  "expand"   : train/prefill fallback. Shard q heads over `model`
+               (padding them up to a multiple of tp when needed —
+               llama4 40->48, musicgen 24->32; padded wq columns / wo rows
+               are zero-init and grad-masked so the function is unchanged);
+               kv projections are replicated and expanded to per-q-head
+               layout inside attention (each rank gathers only its heads'
+               kv). Scores stay rank-local. Prefill caches shard seq over
+               `model`.
+  "head_dim" : decode fallback (q len = 1). Shard the head_dim of
+               wq/wk/wv/wo and of the KV cache; score psums are (B, H, 1, S)
+               — tiny for single-token decode. No head padding needed.
+
+Any mapping whose dimension does not divide the mesh-axis product falls back
+to replication (collected in ``ShardingPolicy.fallbacks`` so the dry-run can
+report it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    """Mesh-axis roles. Axes absent from the mesh must be omitted."""
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"
+    pp_axis: Optional[str] = None     # optional pipeline axis (beyond-paper)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, pipeline: bool = False) -> "Parallelism":
+        names = mesh.axis_names
+        dp = tuple(n for n in ("pod", "data") if n in names)
+        tp = "model" if "model" in names else None
+        if pipeline and "pod" in names:
+            dp = tuple(n for n in ("data",) if n in names)
+            return Parallelism(batch_axes=dp, fsdp_axes=dp, tp_axis=tp,
+                               pp_axis="pod")
+        return Parallelism(batch_axes=dp, fsdp_axes=dp, tp_axis=tp)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def attn_mode(cfg: ModelConfig, tp: int, kind: str = "train") -> str:
+    if cfg.num_heads == 0:
+        return "none"
+    if cfg.num_heads % tp == 0 and cfg.num_kv_heads % tp == 0:
+        return "heads"
+    if kind == "decode" and cfg.head_dim % tp == 0:
+        return "head_dim"
+    return "expand"
+
+
+def padded_heads(cfg: ModelConfig, tp: int, mode: str) -> int:
+    if mode != "expand":
+        return cfg.num_heads
+    return ((cfg.num_heads + tp - 1) // tp) * tp
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    """Resolves logical axis tuples to PartitionSpecs for (cfg, mesh, shape)."""
+    cfg: ModelConfig
+    mesh: Mesh
+    parallel: Parallelism
+    kind: str = "train"            # "train" | "prefill" | "decode"
+    shard_seq_kv: bool = False     # long-context decode: shard cache seq dim
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        tp = axis_size(self.mesh, self.parallel.tp_axis)
+        self.tp = tp
+        self.mode = attn_mode(self.cfg, tp, self.kind)
+        self.h_pad = padded_heads(self.cfg, tp, self.mode)
+        self._rules = self._build_rules()
+
+    def _build_rules(self):
+        par = self.parallel
+        tp = par.tp_axis
+        mode = self.mode
+        q_heads = tp if mode in ("heads", "expand") else None
+        kv_heads = tp if mode == "heads" else None
+        head_dim = tp if mode == "head_dim" else None
+        if self.shard_seq_kv:
+            seq_kv = par.batch_axes               # long-context SP
+        elif mode == "expand":
+            seq_kv = tp                           # prefill cache seq over model
+        elif mode == "head_dim":
+            seq_kv = None                         # cache head_dim over model
+        else:
+            seq_kv = None
+        return {
+            "batch": par.batch_axes,
+            "embed": par.fsdp_axes,
+            "vocab": tp,
+            "q_heads": q_heads,
+            "kv_heads": kv_heads,
+            "head_dim": head_dim,
+            "mlp": tp,
+            "experts": tp,
+            "expert_mlp": None,
+            "d_inner": tp,
+            "ssm_heads": tp,
+            "head_dim_ssm": None,
+            "ssm_state": None,
+            "conv": None,
+            "layers": None,
+            "super": None,
+            "norm": None,
+            "seq": None,
+            "act": None,
+            "seq_kv": seq_kv,
+        }
+
+    def spec(self, shape, axes) -> P:
+        """PartitionSpec for an array of ``shape`` with logical ``axes``."""
+        assert len(shape) == len(axes), (shape, axes)
+        out = []
+        for dim, name in zip(shape, axes):
+            mesh_axes = self._rules.get(name)
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            n = axis_size(self.mesh, mesh_axes)
+            if dim % n != 0:
+                self.fallbacks.append((name, dim, mesh_axes))
+                out.append(None)
+            else:
+                out.append(mesh_axes)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def tree_specs(self, params, axes_tree):
+        return jax.tree.map(lambda p, a: self.spec(p.shape, a),
+                            params, axes_tree)
+
+    def tree_shardings(self, params, axes_tree):
+        specs = self.tree_specs(params, axes_tree)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # -- activation specs --------------------------------------------------
+    def batch_spec(self, ndim: int, batch_dim: int = 0) -> P:
+        parts = [None] * ndim
+        parts[batch_dim] = self.parallel.batch_axes
+        return P(*parts)
+
+    def constraint(self, x, axes):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, axes)))
+
+    def constrain_tree(self, tree, axes_tree):
+        shardings = self.tree_shardings(tree, axes_tree)
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)

@@ -1,0 +1,105 @@
+"""Flash attention TPU kernel: online softmax over KV blocks, VMEM-resident
+accumulators, MXU-aligned (block_q x D) x (D x block_kv) matmuls.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) — the last grid dim is
+sequential on TPU, so the (m, l, acc) running state lives in VMEM scratch
+and is initialized/finalized with pl.when. Supports causal masking, sliding
+windows (gemma local layers) and logit softcaps (gemma2).
+
+Unlike the jnp fallback, score/prob tiles never touch HBM — this is the
+kernel that collapses the memory-roofline term of the dry-run baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale, causal, window, softcap, block_q, block_kv,
+                  seq_len, num_kv_blocks):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, -jnp.inf)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)           # (bq, D)
+    k = k_ref[0].astype(jnp.float32)           # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+    kpos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 1)
+    mask = kpos < seq_len
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=0, softcap=0.0,
+                           block_q=128, block_kv=128, interpret=False):
+    """q/k/v: (BH, S, D) with kv pre-expanded; returns (BH, S, D)."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    pad_q = (-s) % block_q
+    pad_kv = (-s) % block_kv
+    sp = s + max(pad_q, pad_kv)            # pad both to a common length
+    if sp != s:
+        pad = ((0, 0), (0, sp - s), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nq = sp // block_q
+    nk = sp // block_kv
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, seq_len=s,
+        num_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s, :]

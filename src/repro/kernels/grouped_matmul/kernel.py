@@ -1,0 +1,64 @@
+"""Grouped expert matmul TPU kernel (megablocks-lite).
+
+MoE expert FFN over fixed-capacity buffers: for each expert e,
+(C x d) @ (d x f). Grid (E, C/bc, f/bf, d/bd) with f32 VMEM accumulation
+over the contraction grid dim; tiles MXU-aligned (128 multiples).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_sc, *, n_d_blocks):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    x = x_ref[0]
+    w = w_ref[0]
+    acc_sc[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(idd == n_d_blocks - 1)
+    def _fin():
+        o_ref[0] = acc_sc[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_kernel(x, w, *, block_c=128, block_f=128, block_d=256,
+                          interpret=False):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    e, c, d = x.shape
+    f = w.shape[-1]
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    pc, pf, pd = (-c) % block_c, (-f) % block_f, (-d) % block_d
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    cp, dp, fp = c + pc, d + pd, f + pf
+    grid = (e, cp // block_c, fp // block_f, dp // block_d)
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, n_d_blocks=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda ie, ic, if_, id_: (ie, ic, id_)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda ie, ic, if_, id_: (ie, id_, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ie, ic, if_, id_: (ie, ic, if_)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c, :f]

@@ -1,0 +1,8 @@
+"""Oracle: grouped (per-expert) batched matmul."""
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f) in f32 accumulation."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

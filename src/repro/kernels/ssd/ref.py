@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD chunk kernel: sequential state-space scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (b,s,nh,hd); dt: (b,s,nh) (post-softplus); A: (nh,) negative;
+    B/C: (b,s,ds). Returns (y, final_state (b,nh,hd,ds))."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    s0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t * A)
+        upd = jnp.einsum("bnh,bs,bn->bnhs", x_t.astype(jnp.float32),
+                         b_t.astype(jnp.float32), dt_t)
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bnhs,bs->bnh", state, c_t.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

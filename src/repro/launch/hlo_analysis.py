@@ -1,0 +1,417 @@
+"""Trip-count-weighted analysis of compiled (SPMD, per-device) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts every while-loop body
+ONCE (verified empirically), but our layer stacks and microbatch accumulators
+are lax.scans — so FLOPs/bytes/collectives must be weighted by loop trip
+counts (``backend_config={"known_trip_count":...}``) to mean anything.
+
+The module is parsed into computations; a call-graph walk assigns every
+computation an effective execution multiplier (ENTRY=1, while bodies x trip
+count, conditional branches counted once each, fusion bodies inherit the call
+site's multiplier). Per computation we count:
+
+  * dot FLOPs       : 2 * prod(out dims) * prod(lhs contracting dims)
+                      (operand shapes resolved from same-computation defs)
+  * convolution     : 2 * prod(out) * prod(kernel spatial) * Cin/groups
+  * HBM bytes       : sum over *non-fused* instructions of output bytes +
+                      operand bytes (fusion internals don't touch HBM;
+                      the fusion call site is the materialization boundary)
+  * collectives     : all-gather / all-reduce / reduce-scatter / all-to-all /
+                      collective-permute, with ring-model wire-byte estimates
+                      from the output shape and replica_groups size:
+                        all-gather         out * (g-1)/g
+                        all-reduce         2 * out * (g-1)/g
+                        reduce-scatter     out * (g-1)
+                        all-to-all         out * (g-1)/g
+                        collective-permute out
+
+All quantities are per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(?P<name>%[\w.\-]+)\s*=\s*(?P<shape>\(?[^=]*?\)?)\s*(?P<op>[\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^(?P<entry>ENTRY\s+)?(?P<name>%[\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation=(%[\w.\-]+), false_computation=(%[\w.\-]+))|"
+    r"branch_computations=\{([^}]*)\}")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\((?P<args>%[\w.\-]+(?:,\s*%[\w.\-]+)*)\)")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_dims(text: str):
+    """All (dtype, dims, bytes) shapes in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group("dims").split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        out.append((dt, dims, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(b for _, _, b in _shape_dims(text))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _split_computations(text: str):
+    comps, entry = {}, None
+    name, buf = None, []
+    for line in text.splitlines():
+        if name is None:
+            m = _COMP_START_RE.match(line)
+            if m:
+                name = m.group("name")
+                if m.group("entry"):
+                    entry = name
+                buf = []
+                comps[name] = buf
+            continue
+        if line.strip() == "}":
+            name = None
+            continue
+        buf.append(line)
+    return comps, entry
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # bf16->f32 upcast traffic/buffers: the CPU backend has no native bf16
+    # FMA, so XLA converts every bf16 dot operand to f32 (and hoists whole
+    # saved-stack converts out of loops). These do not exist on the TPU
+    # target; we track them so memory/bytes can be reported TPU-adjusted.
+    upcast_bytes: float = 0.0
+    upcast_buffer_bytes: float = 0.0
+    # f32 traffic with a same-dims bf16 twin in the same computation: the
+    # dot(bf16,bf16)->f32 + convert->bf16 pattern the CPU backend emits.
+    # On TPU the MXU epilogue emits bf16 directly; hbm_bytes_tpu counts
+    # such tensors at 2 bytes/element.
+    hbm_bytes_tpu: float = 0.0
+    coll_per_op: dict = dataclasses.field(default_factory=dict)
+    coll_raw_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    num_loops: int = 0
+    trip_counts: list = dataclasses.field(default_factory=list)
+
+    @property
+    def flops(self):
+        return self.dot_flops + self.conv_flops
+
+    def to_json(self):
+        return {
+            "dot_flops": self.dot_flops, "conv_flops": self.conv_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_tpu": self.hbm_bytes_tpu,
+            "upcast_bytes": self.upcast_bytes,
+            "upcast_buffer_bytes": self.upcast_buffer_bytes,
+            "collectives": {"per_op": self.coll_per_op,
+                            "raw_bytes": self.coll_raw_bytes,
+                            "wire_bytes": self.coll_wire_bytes},
+            "num_loops": self.num_loops, "trip_counts": self.trip_counts,
+        }
+
+
+def analyze_module(hlo_text: str) -> ModuleStats:
+    comps, entry = _split_computations(hlo_text)
+
+    # ---- call graph multipliers + fused-computation marking ----
+    mult = defaultdict(float)
+    fused = set()
+    trip_counts = []
+    if entry is None:
+        for k in comps:
+            mult[k] = 1.0
+    else:
+        mult[entry] = 1.0
+        work = [entry]
+        i = 0
+        seen = {entry}
+        while i < len(work):
+            comp = work[i]
+            i += 1
+            for line in comps.get(comp, []):
+                callees = []
+                wm = _WHILE_RE.search(line)
+                if wm and " while(" in line:
+                    trip = 1
+                    tm = _TRIP_RE.search(line)
+                    if tm:
+                        trip = int(tm.group(1))
+                        trip_counts.append(trip)
+                    callees.append((wm.group(2), mult[comp] * trip, False))
+                    callees.append((wm.group(1), mult[comp] * trip, True))
+                bm = _BRANCH_RE.search(line)
+                if bm:
+                    branches = [b for b in (bm.group(1), bm.group(2)) if b]
+                    if bm.group(3):
+                        branches = [b.strip() for b in bm.group(3).split(",")]
+                    for b in branches:
+                        callees.append((b, mult[comp], False))
+                cm = _CALLS_RE.search(line)
+                if cm and " fusion(" in line:
+                    callees.append((cm.group(1), mult[comp], True))
+                am = _TO_APPLY_RE.search(line)
+                if am and " call(" in line:
+                    callees.append((am.group(1), mult[comp], False))
+                elif am:
+                    # reduction lambdas of reduce/all-reduce/sort: no HBM,
+                    # no dots — mark fused so bytes are skipped
+                    callees.append((am.group(1), 0.0, True))
+                for callee, m_, is_fused in callees:
+                    mult[callee] += m_
+                    if is_fused:
+                        fused.add(callee)
+                    if callee not in seen:
+                        seen.add(callee)
+                        work.append(callee)
+
+    # ---- effective read size of fusion parameters -----------------
+    # XLA fuses dynamic-slice/gather into consumers, so a fusion that reads
+    # one (1/L)-slice of a stacked array still lists the whole stack as its
+    # call-site operand. Charge such params at their slice size instead.
+    fusion_param_reads = {}
+    for comp, lines in comps.items():
+        shapes_local = {}
+        param_of = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            shapes_local[dm.group("name")] = dm.group("shape")
+            if dm.group("op") == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", line)
+                if pm:
+                    param_of[dm.group("name")] = int(pm.group(1))
+        if not param_of:
+            continue
+        reads = {}
+        for pname, pidx in param_of.items():
+            full = _shape_bytes(shapes_local.get(pname, ""))
+            consumers = [l for l in lines
+                         if re.search(re.escape(pname) + r"[,)]", l)
+                         and not re.match(rf"\s*(ROOT )?{re.escape(pname)} =", l)]
+            slice_bytes = 0
+            only_slices = bool(consumers)
+            for c in consumers:
+                cm2 = _DEF_RE.match(c)
+                if cm2 and cm2.group("op") in ("dynamic-slice", "gather") and \
+                        re.search(cm2.group("op") + r"\(" + re.escape(pname)
+                                  + r"[,)]", c):
+                    slice_bytes += _shape_bytes(cm2.group("shape"))
+                else:
+                    only_slices = False
+            reads[pidx] = slice_bytes if (only_slices and slice_bytes) else full
+        fusion_param_reads[comp] = reads
+
+    stats = ModuleStats()
+    stats.trip_counts = sorted(trip_counts, reverse=True)[:20]
+    per = defaultdict(lambda: {"count": 0.0, "raw_bytes": 0.0,
+                               "wire_bytes": 0.0})
+    upcast_shapes = {}
+
+    for comp, lines in comps.items():
+        w = mult.get(comp, 0.0)
+        shapes = {}     # %name -> type string
+        bf16_dims = set()
+
+        def _norm(dims):
+            return tuple(d for d in dims if d != 1)
+
+        for line in lines:
+            for mdt, mdims, _ in _shape_dims(line):
+                if mdt == "bf16":
+                    bf16_dims.add(_norm(mdims))
+
+        def _tpu_bytes(type_str: str) -> int:
+            total = 0
+            for dt, dims, b in _shape_dims(type_str):
+                if dt == "f32" and _norm(dims) in bf16_dims and b > 1 << 20:
+                    total += b // 2
+                else:
+                    total += b
+            return total
+
+        for line in lines:
+            if "known_trip_count" in line:
+                stats.num_loops += 1
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, shape_s, op = dm.group("name"), dm.group("shape"), dm.group("op")
+            shapes[name] = shape_s
+            if w == 0.0:
+                continue
+            out_bytes = _shape_bytes(shape_s)
+
+            # ---- dots ----
+            if op == "dot":
+                lc = _LHS_CONTRACT_RE.search(line)
+                args_m = re.search(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
+                if lc is not None and args_m:
+                    lhs_shape = shapes.get(args_m.group(1), "")
+                    lhs_dims_all = _shape_dims(lhs_shape)
+                    out_dims = _shape_dims(shape_s)
+                    if lhs_dims_all and out_dims:
+                        lhs_dims = lhs_dims_all[0][1]
+                        k = 1
+                        for idx in (int(x) for x in lc.group(1).split(",") if x):
+                            if idx < len(lhs_dims):
+                                k *= lhs_dims[idx]
+                        out_n = 1
+                        for d in out_dims[0][1]:
+                            out_n *= d
+                        stats.dot_flops += w * 2.0 * out_n * k
+
+            # ---- convolutions ----
+            elif op == "convolution":
+                out_dims = _shape_dims(shape_s)
+                wm_ = _WINDOW_RE.search(line)
+                fgc = _FGC_RE.search(line)
+                args_m = re.search(r"convolution\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
+                if out_dims and args_m:
+                    out_n = 1
+                    for d in out_dims[0][1]:
+                        out_n *= d
+                    spatial = 1
+                    if wm_:
+                        for d in wm_.group(1).split("x"):
+                            spatial *= int(d)
+                    rhs = _shape_dims(shapes.get(args_m.group(2), ""))
+                    cin_per_group = 1
+                    if rhs:
+                        # kernel layout has In/Out channel dims; approximate
+                        # Cin/groups as prod(kernel)/ (spatial * out_ch-ish)
+                        pass
+                    groups = int(fgc.group(1)) if fgc else 1
+                    stats.conv_flops += w * 2.0 * out_n * spatial
+                    _ = groups
+
+            # ---- collectives ----
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLL_OPS and not op.endswith("-done"):
+                g = _group_size(line)
+                # TPU collectives move bf16 where the CPU backend upcast to
+                # f32 (same twin discount as hbm_bytes_tpu)
+                out_bytes = _tpu_bytes(shape_s)
+                if base_op == "all-gather":
+                    wire = out_bytes * (g - 1) / max(g, 1)
+                elif base_op == "all-reduce":
+                    wire = 2 * out_bytes * (g - 1) / max(g, 1)
+                elif base_op == "reduce-scatter":
+                    wire = out_bytes * (g - 1)
+                elif base_op == "all-to-all":
+                    wire = out_bytes * (g - 1) / max(g, 1)
+                else:
+                    wire = out_bytes
+                d = per[base_op]
+                d["count"] += w
+                d["raw_bytes"] += out_bytes * w
+                d["wire_bytes"] += wire * w
+
+            # ---- CPU bf16->f32 upcasts (don't exist on the TPU target) ----
+            if op == "convert" and "f32[" in shape_s:
+                am_ = re.search(r"convert\((%[\w.\-]+)", line)
+                src = shapes.get(am_.group(1), "") if am_ else ""
+                if "bf16[" in src:
+                    stats.upcast_bytes += w * (out_bytes + out_bytes // 2)
+                    if out_bytes >= 1 << 30:
+                        key = _SHAPE_RE.search(shape_s)
+                        upcast_shapes[key.group(0) if key else shape_s] = \
+                            out_bytes
+                continue
+
+            # ---- HBM bytes (materialization boundaries only) ----
+            # while/conditional/call pass aliased buffers (no traffic);
+            # dynamic-slice reads only its output-sized window; DUS writes
+            # only the update operand's window (read-modify-write).
+            if comp in fused or op in ("parameter", "constant",
+                                       "get-tuple-element", "tuple",
+                                       "bitcast", "while", "conditional",
+                                       "call", "copy-start", "copy-done",
+                                       "after-all"):
+                continue
+            if op == "dynamic-slice":
+                stats.hbm_bytes += w * 2 * out_bytes
+                stats.hbm_bytes_tpu += w * 2 * _tpu_bytes(shape_s)
+            elif op == "dynamic-update-slice":
+                am = re.search(
+                    r"dynamic-update-slice\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
+                upd_s = shapes.get(am.group(2), "") if am else ""
+                stats.hbm_bytes += w * 2 * _shape_bytes(upd_s)
+                stats.hbm_bytes_tpu += w * 2 * _tpu_bytes(upd_s)
+            else:
+                operand_bytes = 0
+                am = _OPERANDS_RE.search(line[line.find(op + "("):])
+                if am:
+                    refs = [r.strip() for r in am.group("args").split(",")]
+                    eff = None
+                    if op == "fusion":
+                        cm2 = _CALLS_RE.search(line)
+                        if cm2:
+                            eff = fusion_param_reads.get(cm2.group(1))
+                    tpu_operand_bytes = 0
+                    for idx, ref in enumerate(refs):
+                        rs = shapes.get(ref, "")
+                        full = _shape_bytes(rs)
+                        tb = _tpu_bytes(rs)
+                        if eff is not None and idx in eff:
+                            operand_bytes += min(full, eff[idx])
+                            tpu_operand_bytes += min(tb, eff[idx])
+                        else:
+                            operand_bytes += full
+                            tpu_operand_bytes += tb
+                stats.hbm_bytes += w * (out_bytes + operand_bytes)
+                stats.hbm_bytes_tpu += w * (_tpu_bytes(shape_s)
+                                            + tpu_operand_bytes)
+
+    stats.coll_per_op = dict(per)
+    stats.coll_raw_bytes = sum(d["raw_bytes"] for d in per.values())
+    stats.coll_wire_bytes = sum(d["wire_bytes"] for d in per.values())
+    stats.upcast_buffer_bytes = float(sum(upcast_shapes.values()))
+    return stats
+
+
+# Back-compat helper used by tests
+def collective_stats(hlo_text: str):
+    s = analyze_module(hlo_text)
+    return s

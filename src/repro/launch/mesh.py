@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (devices are only enumerated when the mesh is built).
+
+Production target: TPU v5e pods, 256 chips/pod.
+  single-pod : (data=16, model=16)                 = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)          = 512 chips
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices tests forced."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    from jax.sharding import Mesh
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+# v5e hardware constants for the roofline (single chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_LINK_BW = 50e9             # bytes/s per link

@@ -1,0 +1,55 @@
+"""Serving driver: edge router over serving replicas with batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models.model import build_model
+from repro.serving.engine import EdgeRouter, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = reduce_cfg(get_config(args.arch))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engines = [ServingEngine(model, params, slots=args.slots,
+                             max_seq=args.max_seq, name=f"replica{i}")
+               for i in range(args.replicas)]
+    router = EdgeRouter(engines)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    futures = []
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=int(rng.integers(4, 17)))
+        futures.append(router.submit(prompt, max_new_tokens=args.max_new))
+    router.drain()
+    outs = [f.result() for f in futures]
+    dt = time.time() - t0
+    total = sum(len(o) for o in outs)
+    print(f"{args.requests} requests over {args.replicas} replicas: "
+          f"{total} tokens in {dt:.2f}s ({total/dt:,.1f} tok/s)")
+    for name, m in router.metrics().items():
+        print(f"  {name}: {m}")
+    return outs
+
+
+if __name__ == "__main__":
+    main()

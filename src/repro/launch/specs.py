@@ -1,0 +1,151 @@
+"""Abstract (ShapeDtypeStruct) argument builders for every (arch x shape):
+weak-type-correct, shardable, zero device allocation. The dry-run lowers
+against these; launch-time code reuses them for sharding real arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import Parallelism, ShardingPolicy
+
+
+def make_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                pipeline: bool = False):
+    parallel = Parallelism.for_mesh(mesh, pipeline=pipeline)
+    shard_seq = shape.name == "long_500k"
+    policy = ShardingPolicy(cfg, mesh, parallel, kind=shape.kind,
+                            shard_seq_kv=shard_seq)
+    return policy, parallel
+
+
+def _with_shardings(sds_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings_tree)
+
+
+def abstract_params(model, policy: ShardingPolicy):
+    """(params ShapeDtypeStructs with shardings, axes, raw shardings)."""
+    cap = {}
+
+    def only_p(key):
+        p, ax = model.init(key)
+        cap["ax"] = ax
+        return p
+
+    sds = jax.eval_shape(only_p, jax.random.PRNGKey(0))
+    axes = cap["ax"]
+    sh = policy.tree_shardings(sds, axes)
+    return _with_shardings(sds, sh), axes, sh
+
+
+def abstract_opt_state(params_sds, axes, policy, moment_dtype="float32"):
+    rep = NamedSharding(policy.mesh, P())
+    if moment_dtype == "int8":
+        m = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                         params_sds)
+        sc = jax.tree.map(lambda p: jax.ShapeDtypeStruct((), jnp.float32,
+                                                         sharding=rep),
+                          params_sds)
+        sh = policy.tree_shardings(m, axes)
+        sc_sh = jax.tree.map(lambda _: rep, params_sds)
+        return {
+            "m": _with_shardings(m, sh), "m_scale": sc,
+            "v": _with_shardings(m, sh), "v_scale": sc,
+            "count": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+        }, {"m": sh, "m_scale": sc_sh, "v": sh, "v_scale": sc_sh,
+            "count": rep}
+    mdt = jnp.dtype(moment_dtype)
+    m = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params_sds)
+    sh = policy.tree_shardings(m, axes)
+    return {
+        "m": _with_shardings(m, sh),
+        "v": _with_shardings(m, sh),
+        "count": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+    }, {"m": sh, "v": sh, "count": rep}
+
+
+def abstract_cache(model, policy, batch: int, max_seq: int):
+    cap = {}
+
+    def only_c():
+        c, ax = model.init_cache(batch, max_seq)
+        cap["ax"] = ax
+        return c
+
+    sds = jax.eval_shape(only_c)
+    axes = cap["ax"]
+    sh = policy.tree_shardings(sds, axes)
+    return _with_shardings(sds, sh), axes, sh
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, policy):
+    """Training/prefill batch ShapeDtypeStructs (inputs + labels)."""
+    b, s = shape.global_batch, shape.seq_len
+    mesh = policy.mesh
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, policy.spec((b, s, cfg.d_model),
+                                                     ("batch", "seq", "act"))))
+    else:
+        inputs = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32,
+            sharding=NamedSharding(mesh, policy.spec((b, s), ("batch", "seq"))))
+    labels = jax.ShapeDtypeStruct(
+        (b, s), jnp.int32,
+        sharding=NamedSharding(mesh, policy.spec((b, s), ("batch", "seq"))))
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, policy):
+    """Single-token decode inputs: (inputs, pos)."""
+    b = shape.global_batch
+    mesh = policy.mesh
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct(
+            (b, 1, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, policy.spec((b, 1, cfg.d_model),
+                                                     ("batch", "seq", "act"))))
+    else:
+        inputs = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32,
+            sharding=NamedSharding(mesh, policy.spec((b, 1), ("batch", "seq"))))
+    pos = jax.ShapeDtypeStruct(
+        (b,), jnp.int32,
+        sharding=NamedSharding(mesh, policy.spec((b,), ("batch",))))
+    return inputs, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, policy, model):
+    """All abstract inputs for the step that this shape lowers.
+
+    train  -> (state, batch)
+    prefill-> (params, batch_inputs)
+    decode -> (params, caches, inputs, pos)
+    Returns (args tuple, aux dict with shardings for out_shardings/donation).
+    """
+    params_sds, axes, params_sh = abstract_params(model, policy)
+    if shape.kind == "train":
+        from repro.optim.adamw import OptimizerConfig
+        mdt = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+        opt_sds, opt_sh = abstract_opt_state(params_sds, axes, policy, mdt)
+        state = {"params": params_sds, "opt": opt_sds}
+        state_sh = {"params": params_sh, "opt": opt_sh}
+        batch = batch_specs(cfg, shape, policy)
+        return (state, batch), {"state_sh": state_sh, "moment_dtype": mdt,
+                                "axes": axes}
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, policy)
+        return (params_sds, batch["inputs"]), {"params_sh": params_sh,
+                                               "axes": axes}
+    # decode
+    cache_sds, cache_axes, cache_sh = abstract_cache(
+        model, policy, shape.global_batch, shape.seq_len)
+    inputs, pos = decode_specs(cfg, shape, policy)
+    return (params_sds, cache_sds, inputs, pos), {
+        "params_sh": params_sh, "cache_sh": cache_sh, "axes": axes,
+        "cache_axes": cache_axes}

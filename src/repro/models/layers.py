@@ -1,0 +1,397 @@
+"""Core model building blocks (pure JAX, functional, pytree params).
+
+Attention is implemented three ways:
+  * ``attention_naive``     — reference einsum attention (tests / tiny shapes)
+  * ``attention_blocked``   — flash-style online-softmax over KV blocks in jnp
+                              (memory-safe for 32k prefill; the dry-run path)
+  * local sliding-window    — scan over Q blocks with a static KV window slice
+                              (real FLOP savings for gemma local layers)
+On TPU the Pallas kernel in ``repro.kernels.flash_attention`` replaces these
+when ``config.use_pallas`` is set (see ops.py there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Param initialisation helpers. Params are plain dicts; alongside every init
+# we return a matching pytree of *logical axis names* used by
+# repro.distributed.sharding to derive PartitionSpecs.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, zero_centered: bool = True):
+    """RMSNorm with f32 accumulation for the mean-square but NO whole-tensor
+    f32 convert of ``x`` (T5X-style). The full-precision variant materializes
+    ``convert(x)`` which XLA hoists out of the transposed layer loop as an
+    f32 copy of the entire saved residual stack — 2x residual memory for a
+    pure scheduling artifact.
+    """
+    dtype = x.dtype
+    # the f32 convert feeds ONLY the square->reduce chain, so XLA fuses it
+    # into the reduction without materializing an f32 copy of x (an einsum
+    # here lowers as a dot on CPU, which force-materializes f32 operands)
+    var = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1,
+                  keepdims=True) / x.shape[-1]
+    scale = jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    w = (1.0 + w) if zero_centered else w
+    return (x * scale.astype(dtype)) * w.astype(dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    Angles/sin/cos are computed in f32 (they are (S, D/2) — tiny); the
+    rotation itself multiplies in x.dtype: a whole-tensor f32 cast of q/k
+    here would add several f32 x (S, H, D) tensors per layer to the HBM
+    roofline for no accuracy benefit (sin/cos are already exact in f32 and
+    bf16 rotation error ~1e-2 relative is below attention noise).
+    """
+    freqs = jnp.asarray(rope_freqs(x.shape[-1], theta), dtype=jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                               # (..., S, 1, D/2)
+    sin = jnp.sin(angles).astype(x.dtype)
+    cos = jnp.cos(angles).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype, h_pad: Optional[int] = None):
+    """h_pad > num_heads pads q-head slices with zeros (grad-masked by the
+    trainer via ``attn_grad_masks`` so the function is exactly unchanged)."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    he = h_pad or h
+    ks = jax.random.split(key, 4)
+    qmask = None
+    if he > h:
+        qmask = (jnp.arange(he) < h).astype(dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, he, hd), dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype),
+        "wo": dense_init(ks[3], (he, hd, d), dtype,
+                         scale=1.0 / math.sqrt(h * hd)),
+    }
+    if qmask is not None:
+        p["wq"] = p["wq"] * qmask[None, :, None]
+        p["wo"] = p["wo"] * qmask[:, None, None]
+    ax = {
+        "wq": ("embed", "q_heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("q_heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((he, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+        ax["bq"] = ("q_heads", "head_dim")
+        ax["bk"] = ("kv_heads", "head_dim")
+        ax["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+        ax["q_norm"] = ("head_dim",)
+        ax["k_norm"] = ("head_dim",)
+    return p, ax
+
+
+def attn_grad_masks(cfg, h_pad: Optional[int] = None):
+    """Same structure as attn_init params; 1.0 where unmasked, else a
+    broadcastable 0/1 array zeroing padded q-head slices."""
+    h = cfg.num_heads
+    he = h_pad or h
+    base = {"wq": 1.0, "wk": 1.0, "wv": 1.0, "wo": 1.0}
+    if cfg.qkv_bias:
+        base.update({"bq": 1.0, "bk": 1.0, "bv": 1.0})
+    if cfg.qk_norm:
+        base.update({"q_norm": 1.0, "k_norm": 1.0})
+    if he > h:
+        m = (jnp.arange(he) < h).astype(jnp.float32)
+        base["wq"] = m[None, :, None]
+        base["wo"] = m[:, None, None]
+        if cfg.qkv_bias:
+            base["bq"] = m[:, None]
+    return base
+
+
+def kv_head_map(num_heads: int, num_kv_heads: int, h_pad: int):
+    """Per-q-head kv index (padded heads clamp to the last kv head)."""
+    g = max(num_heads // num_kv_heads, 1)
+    return jnp.clip(jnp.arange(h_pad) // g, 0, num_kv_heads - 1)
+
+
+def expand_kv(k, head_map):
+    """(B, S, KV, hd) -> (B, S, H_pad, hd) per-q-head layout."""
+    return jnp.take(k, head_map, axis=2)
+
+
+def qkv_proj(p, cfg, x, positions, theta: float):
+    """Project + rope. x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _scale(cfg):
+    return 1.0 / math.sqrt(cfg.head_dim)
+
+
+def _group(q, kv_heads):
+    """(B,S,H,hd) -> (B,S,KV,G,hd) grouping q heads over kv heads."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def attention_naive(cfg, q, k, v, *, q_offset=0, kv_len_mask=None,
+                    window: int = 0, causal: bool = True):
+    """Reference attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd).
+
+    q_offset: absolute position of q[0] (decode: pos). kv_len_mask: (B, Skv)
+    boolean of valid cache slots (decode with padded cache).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    qg = _group(q, kvh)                                     # (B,Sq,KV,G,hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * _scale(cfg)
+    scores = softcap(scores, cfg.attn_softcap)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask = mask[None, None, None]
+    if kv_len_mask is not None:
+        mask = mask & kv_len_mask[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention_blocked(cfg, q, k, v, *, block: int = 1024, causal: bool = True,
+                      window: int = 0):
+    """Flash-style online softmax over KV blocks (lax.scan); O(B·H·Sq·block)
+    score memory. Numerics match naive to bf16 tolerance."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    block = min(block, skv)
+    nkv = -(-skv // block)
+    pad = nkv * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = _group(q, kvh)
+    scale = _scale(cfg)
+    qpos = jnp.arange(sq)
+
+    kb = k.reshape(b, nkv, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nkv, block, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        i, kblk, vblk = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kblk).astype(jnp.float32) * scale
+        s = softcap(s, cfg.attn_softcap)
+        kp = i * block + jnp.arange(block)
+        msk = jnp.ones((sq, block), bool)
+        if causal:
+            msk &= qpos[:, None] >= kp[None, :]
+        if window:
+            msk &= qpos[:, None] - kp[None, :] < window
+        msk &= (kp < skv)[None, :]
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkh->bkgsh", p.astype(q.dtype), vblk)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    g = h // kvh
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+def attention_local(cfg, q, k, v, *, window: int, q_block: int = 512):
+    """Sliding-window attention with static KV slices per Q block: FLOPs scale
+    with window, not seq^2. Requires seq % q_block == 0."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    if sq <= max(window, q_block):
+        return attention_naive(cfg, q, k, v, window=window)
+    assert sq % q_block == 0, (sq, q_block)
+    nq = sq // q_block
+    span = window + q_block          # kv needed per q block (static)
+    kp = jnp.pad(k, ((0, 0), (span - q_block, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (span - q_block, 0), (0, 0), (0, 0)))
+
+    def one_block(i):
+        qs = i * q_block
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_block, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(kp, qs, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, qs, span, axis=1)
+        qg = _group(qb, kvh)
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kb).astype(jnp.float32)
+        s = softcap(s * _scale(cfg), cfg.attn_softcap)
+        qpos = qs + jnp.arange(q_block)
+        kpos = qs - (span - q_block) + jnp.arange(span)
+        msk = (qpos[:, None] >= kpos[None, :]) \
+            & (qpos[:, None] - kpos[None, :] < window) \
+            & (kpos >= 0)[None, :]
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", p, vb)
+        return o.reshape(b, q_block, h, hd)
+
+    outs = jax.lax.map(one_block, jnp.arange(nq))    # (nq, B, qb, H, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention_fused_proxy(cfg, q, k, v, *, window: int = 0):
+    """DRY-RUN lowering proxy (see ModelConfig.attn_impl): identical dot
+    dimensions/FLOPs to flash attention, but score tiles stay bf16 with no
+    softmax chain — models what the Pallas kernel does in VMEM on TPU. Not
+    a numerical attention implementation."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _group(q, kvh)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k) * jnp.asarray(
+        _scale(cfg), q.dtype)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, jnp.zeros((), q.dtype))
+    out = jnp.einsum("bkgst,btkh->bskgh", s, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(cfg, q, k, v, *, window: int = 0, block: int = 1024):
+    """Dispatch: local layers use the static-window path; long global layers
+    use blocked online softmax; small seqs use the naive core."""
+    if cfg.attn_impl == "fused_proxy":
+        return attention_fused_proxy(cfg, q, k, v, window=window)
+    sq = q.shape[1]
+    if window and sq > window:
+        return attention_local(cfg, q, k, v, window=window)
+    if sq > 2048:
+        return attention_blocked(cfg, q, k, v, block=block, window=window)
+    return attention_naive(cfg, q, k, v, window=window)
+
+
+def decode_attention(cfg, q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token decode. q: (B,1,H,hd); caches: (B,S,KV,hd); pos: (B,) int32
+    (position of the *current* token, already written into the cache)."""
+    b, _, h, hd = q.shape
+    skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    qg = _group(q, kvh)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache).astype(jnp.float32)
+    s = softcap(s * _scale(cfg), cfg.attn_softcap)
+    kpos = jnp.arange(skv)
+    valid = kpos[None, :] <= pos[:, None]
+    if window:
+        valid &= pos[:, None] - kpos[None, :] < window
+    s = jnp.where(valid[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, ff), dtype),
+        "wg": dense_init(ks[1], (d, ff), dtype),
+        "wo": dense_init(ks[2], (ff, d), dtype),
+    }
+    ax = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return p, ax
+
+
+def mlp_apply(p, x, act=jax.nn.silu):
+    h = act(jnp.einsum("bsd,df->bsf", x, p["wg"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["wi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg, dtype):
+    p = {"tok": dense_init(key, (cfg.padded_vocab, cfg.d_model), dtype, scale=1.0)}
+    ax = {"tok": ("vocab", "embed")}
+    return p, ax
+
+
+def embed_apply(p, tokens, d_model: int):
+    return p["tok"][tokens] * jnp.asarray(
+        math.sqrt(d_model), p["tok"].dtype)
+
+
+def unembed_apply(p, cfg, x):
+    logits = jnp.einsum("bsd,vd->bsv", x, p["tok"]).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap)

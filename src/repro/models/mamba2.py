@@ -1,0 +1,323 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training/prefill path,
+O(1)-state decode path, and a sequential-scan reference oracle.
+
+Shapes follow the paper: d_inner = expand*d_model, SSM heads = d_inner/headdim,
+single B/C group shared across heads (ngroups=1).
+
+The chunked algorithm (paper §6):
+  intra-chunk: dual quadratic form  Y_ij = (C_i . B_j) * exp(A_i..j) * dt_j x_j
+  inter-chunk: per-chunk states S_c = sum_j exp(A_end..j) dt_j B_j (x) x_j,
+               carried by a (short) lax.scan over chunks, read back via C_i.
+
+The intra-chunk dual form is the TPU hot-spot; ``repro.kernels.ssd`` provides
+the Pallas kernel for it (MXU matmuls over (chunk, chunk) tiles).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    ds = s.d_state
+    ks = jax.random.split(key, 9)
+    p = {
+        "w_z": dense_init(ks[0], (d, di), dtype),
+        "w_x": dense_init(ks[1], (d, di), dtype),
+        "w_B": dense_init(ks[2], (d, ds), dtype),
+        "w_C": dense_init(ks[3], (d, ds), dtype),
+        "w_dt": dense_init(ks[4], (d, nh), dtype),
+        "conv_x": dense_init(ks[5], (s.conv_width, di), dtype, scale=0.5),
+        "conv_B": dense_init(ks[6], (s.conv_width, ds), dtype, scale=0.5),
+        "conv_C": dense_init(ks[7], (s.conv_width, ds), dtype, scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[8], (di, d), dtype),
+    }
+    ax = {
+        "w_z": ("embed", "d_inner"), "w_x": ("embed", "d_inner"),
+        "w_B": ("embed", "ssm_state"), "w_C": ("embed", "ssm_state"),
+        "w_dt": ("embed", "ssm_heads"),
+        "conv_x": ("conv", "d_inner"), "conv_B": ("conv", "ssm_state"),
+        "conv_C": ("conv", "ssm_state"),
+        "A_log": ("ssm_heads",), "D": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+        "norm": ("d_inner",), "out_proj": ("d_inner", "embed"),
+    }
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w):
+    """x: (B, S, C); w: (W, C) depthwise causal conv + silu.
+
+    Expressed as W shifted multiply-adds instead of lax.conv: a width-4
+    depthwise conv as an im2col convolution materializes (W, ..., S, C)
+    patch stacks in the backward pass; the shift form fuses into W
+    elementwise FMAs with identical FLOPs."""
+    b, s, c = x.shape
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(width):
+        out = out + xp[:, k:k + s, :] * w[k][None, None, :].astype(x.dtype)
+    return jax.nn.silu(out)
+
+
+def conv_step(conv_state, x_t, w):
+    """Single-token conv. conv_state: (B, W-1, C); x_t: (B, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x_t.dtype)
+    return window[:, 1:], jax.nn.silu(out)
+
+
+# ---------------------------------------------------------------------------
+# SSD cores
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Sequential oracle. x: (b,s,nh,hd); dt: (b,s,nh); A: (nh,) (negative);
+    B, C: (b,s,ds). Returns (y, final_state (b,nh,hd,ds))."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    s0 = initial_state if initial_state is not None else jnp.zeros(
+        (b, nh, hd, ds), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                       # (b,nh,hd),(b,nh),(b,ds),(b,ds)
+        da = jnp.exp(dt_t * A)                           # (b,nh)
+        upd = jnp.einsum("bnh,bs,bn->bnhs", x_t.astype(jnp.float32), b_t.astype(jnp.float32), dt_t)
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bnhs,bs->bnh", state, c_t.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def _segsum(a):
+    """a: (..., c) log-decays -> (..., c, c) lower-tri cumulative sums:
+    out[i, j] = sum_{j < t <= i} a_t for i >= j, -inf otherwise."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # sum_{j<t<=i}
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_fused_proxy(x, dt, A, B, C, chunk: int):
+    """DRY-RUN lowering proxy (see ModelConfig.ssd_impl): identical dot
+    dimensions/FLOPs to the chunked SSD, but the decay/segsum f32 chains are
+    omitted and everything stays bf16 — models the Pallas SSD kernel's VMEM
+    residency. Not a numerical SSD implementation."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    Bc = B.reshape(b, nc, chunk, ds)
+    Cc = C.reshape(b, nc, chunk, ds)
+    scores = jnp.einsum("bncs,bnks->bnck", Cc, Bc)
+    y_intra = jnp.einsum("bnck,bnkhp->bnchp", scores, xc)
+    s_loc = jnp.einsum("bncs,bnchp->bnhps", Bc, xc)
+
+    def step(state, sl):
+        return state * jnp.asarray(0.9, state.dtype) + sl, state
+
+    final, s_prev = jax.lax.scan(step, jnp.zeros((b, nh, hd, ds), x.dtype),
+                                 s_loc.transpose(1, 0, 2, 3, 4))
+    y_inter = jnp.einsum("bncs,nbhps->bnchp", Cc, s_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final.astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD. Same contract as ssd_ref; s % chunk == 0 required."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, ds)
+    Cc = C.reshape(b, nc, chunk, ds)
+    a = dtc * A                                            # (b,nc,c,nh) log decay
+    acs = jnp.cumsum(a, axis=2)
+
+    # ---- intra-chunk (dual form) ----
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))          # (b,nc,nh,c,c)
+    scores = jnp.einsum("bncs,bnks->bnck", Cc.astype(f32), Bc.astype(f32))
+    M = scores[:, :, None] * L                             # (b,nc,nh,c,c)
+    xdt = xc.astype(f32) * dtc[..., None]                  # (b,nc,c,nh,hd)
+    y_intra = jnp.einsum("bnhck,bnkhp->bnchp", M, xdt)
+
+    # ---- chunk states ----
+    decay_out = jnp.exp(acs[:, :, -1:, :] - acs)           # (b,nc,c,nh)
+    S_loc = jnp.einsum("bncs,bnch,bnchp->bnhps",
+                       Bc.astype(f32), decay_out * dtc, xc.astype(f32))
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                # (b,nc,nh)
+    s0 = initial_state if initial_state is not None else jnp.zeros(
+        (b, nh, hd, ds), f32)
+
+    def step(state, inp):
+        dec, s_loc = inp                                   # (b,nh),(b,nh,hd,ds)
+        prev = state
+        state = state * dec[..., None, None] + s_loc
+        return state, prev
+
+    final, S_prev = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), S_loc.transpose(1, 0, 2, 3, 4)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)               # (b,nc,nh,hd,ds)
+
+    y_inter = jnp.einsum("bncs,bnhps->bnchp", Cc.astype(f32), S_prev) \
+        * jnp.exp(acs)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, nh, hd).astype(x.dtype)
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Decode. state: (b,nh,hd,ds) f32; x_t: (b,nh,hd); dt_t: (b,nh);
+    B_t/C_t: (b,ds). Returns (state, y (b,nh,hd))."""
+    da = jnp.exp(dt_t * A)
+    upd = jnp.einsum("bnh,bs,bn->bnhs", x_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32), dt_t)
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bnhs,bs->bnh", state, C_t.astype(jnp.float32))
+    return state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+
+def _proj(p, h):
+    z = jnp.einsum("bsd,di->bsi", h, p["w_z"])
+    x = jnp.einsum("bsd,di->bsi", h, p["w_x"])
+    B = jnp.einsum("bsd,dk->bsk", h, p["w_B"])
+    C = jnp.einsum("bsd,dk->bsk", h, p["w_C"])
+    dt = jnp.einsum("bsd,dn->bsn", h, p["w_dt"]).astype(jnp.float32)
+    return z, x, B, C, dt
+
+
+def mamba_block(p, cfg, h, *, use_ref=False):
+    """Full-sequence mamba2 block. h: (B, S, d) -> (B, S, d)."""
+    s_cfg = cfg.ssm
+    nh = s_cfg.num_heads(cfg.d_model)
+    hd = s_cfg.head_dim
+    b, s, _ = h.shape
+    z, x, B, C, dt = _proj(p, h)
+    x = causal_conv(x, p["conv_x"])
+    B = causal_conv(B, p["conv_B"])
+    C = causal_conv(C, p["conv_C"])
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, s, nh, hd)
+    if use_ref or s % s_cfg.chunk_size != 0:
+        y, _ = ssd_ref(xh, dt, A, B, C)
+    elif cfg.ssd_impl == "fused_proxy":
+        y, _ = ssd_fused_proxy(xh, dt, A, B, C, s_cfg.chunk_size)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, B, C, s_cfg.chunk_size)
+    y = y + x.reshape(b, s, nh, hd) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(b, s, nh * hd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def mamba_prefill(p, cfg, h):
+    """Like mamba_block but also returns (conv_states, ssd_state) for decode."""
+    s_cfg = cfg.ssm
+    nh, hd = s_cfg.num_heads(cfg.d_model), s_cfg.head_dim
+    b, s, _ = h.shape
+    z, x, B, C, dt = _proj(p, h)
+    w = s_cfg.conv_width
+    conv_state = {
+        "x": x[:, s - (w - 1):, :], "B": B[:, s - (w - 1):, :],
+        "C": C[:, s - (w - 1):, :],
+    }
+    x = causal_conv(x, p["conv_x"])
+    B = causal_conv(B, p["conv_B"])
+    C = causal_conv(C, p["conv_C"])
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, s, nh, hd)
+    if s % s_cfg.chunk_size == 0:
+        y, final = ssd_chunked(xh, dt, A, B, C, s_cfg.chunk_size)
+    else:
+        y, final = ssd_ref(xh, dt, A, B, C)
+    y = y + xh * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(b, s, nh * hd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": final}
+
+
+def mamba_decode(p, cfg, h_t, cache):
+    """Single-token decode. h_t: (B, 1, d). cache: {"conv": {...}, "ssd": ...}."""
+    s_cfg = cfg.ssm
+    nh, hd = s_cfg.num_heads(cfg.d_model), s_cfg.head_dim
+    b = h_t.shape[0]
+    z, x, B, C, dt = _proj(p, h_t)
+    z, x, B, C, dt = z[:, 0], x[:, 0], B[:, 0], C[:, 0], dt[:, 0]
+    conv = cache["conv"]
+    cs_x, x = conv_step(conv["x"], x, p["conv_x"])
+    cs_B, B = conv_step(conv["B"], B, p["conv_B"])
+    cs_C, C = conv_step(conv["C"], C, p["conv_C"])
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    state, y = ssd_step(cache["ssd"], x.reshape(b, nh, hd), dt, A, B, C)
+    y = y + x.reshape(b, nh, hd) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(b, nh * hd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])
+    new_cache = {"conv": {"x": cs_x, "B": cs_B, "C": cs_C}, "ssd": state}
+    return out[:, None, :], new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    w = s.conv_width
+    cache = {
+        "conv": {
+            "x": jnp.zeros((batch, w - 1, di), dtype),
+            "B": jnp.zeros((batch, w - 1, s.d_state), dtype),
+            "C": jnp.zeros((batch, w - 1, s.d_state), dtype),
+        },
+        "ssd": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+    ax = {
+        "conv": {
+            "x": ("batch", "conv", "d_inner"),
+            "B": ("batch", "conv", "ssm_state"),
+            "C": ("batch", "conv", "ssm_state"),
+        },
+        "ssd": ("batch", "ssm_heads", "head_dim_ssm", "ssm_state"),
+    }
+    return cache, ax

@@ -1,0 +1,136 @@
+"""AdamW with dtype-configurable moments (bf16 moments for the 400B config),
+global-norm clipping, and warmup+cosine schedule. Functional, pytree-native.
+
+Update math always runs in f32; storage dtypes are configurable so optimizer
+state fits HBM at 256 chips for the largest assigned arch (llama4-maverick:
+bf16 moments -> 8 bytes/param total optimizer+grad state instead of 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # "bfloat16" for very large models
+    grad_accum_dtype: str = "float32"
+
+
+def schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def _is_int8(cfg) -> bool:
+    return cfg.moment_dtype == "int8"
+
+
+def init(params, cfg: OptimizerConfig):
+    if _is_int8(cfg):
+        # 8-bit Adam style: int8 payload + per-tensor f32 scale
+        z8 = lambda p: jnp.zeros(p.shape, jnp.int8)
+        sc = lambda p: jnp.zeros((), jnp.float32)
+        return {
+            "m": jax.tree.map(z8, params),
+            "m_scale": jax.tree.map(sc, params),
+            "v": jax.tree.map(z8, params),
+            "v_scale": jax.tree.map(sc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _q8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+
+def _update_int8(grads, opt_state, params, cfg, count, scale_, lr, bc1, bc2):
+    def upd(g, m8, ms, v8, vs, p):
+        g = g.astype(jnp.float32) * scale_
+        m32 = cfg.b1 * m8.astype(jnp.float32) * ms + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v8.astype(jnp.float32) * vs + (1 - cfg.b2) * jnp.square(g)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        nm8, nms = _q8(m32)
+        nv8, nvs = _q8(v32)
+        return new_p, nm8, nms, nv8, nvs
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["m_scale"],
+                       opt_state["v"], opt_state["v_scale"], params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": pick(1), "m_scale": pick(2), "v": pick(3),
+                 "v_scale": pick(4), "count": count}
+    return pick(0), new_state
+
+
+def update(grads, opt_state, params, cfg: OptimizerConfig):
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+    lr = schedule(cfg, count)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** c
+    bc2 = 1 - cfg.b2 ** c
+    if _is_int8(cfg):
+        new_params, new_state = _update_int8(
+            grads, opt_state, params, cfg, count, scale, lr, bc1, bc2)
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:      # no decay on norms/biases
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

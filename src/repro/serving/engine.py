@@ -1,0 +1,174 @@
+"""Serving engine: KV-cache slots, continuous batching, edge routing.
+
+Paper mapping: *edge nodes* (Traefik) load-balance requests over service
+replicas; here an ``EdgeRouter`` dispatches generation requests over
+data-parallel ``ServingEngine`` replicas, each of which runs a slotted
+continuous-batching decode loop (new requests join between decode steps,
+finished ones free their slot — the serving analogue of short-lived
+containerized tools).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray          # prompt (prompt_len,)
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1: never stop early
+    future: Future = dataclasses.field(default_factory=Future)
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    submit_t: float = dataclasses.field(default_factory=time.time)
+
+
+class ServingEngine:
+    """Slotted continuous batching over a fixed decode batch."""
+
+    def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
+                 name: str = "engine0"):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.name = name
+        self.cache, _ = model.init_cache(slots, max_seq)
+        self.pos = np.zeros((slots,), np.int32) - 1    # -1: free slot
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.metrics = {"requests": 0, "tokens": 0, "prefills": 0,
+                        "decode_steps": 0}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode(p, c, t, pos))
+        self._stop = False
+
+    # -- request API ------------------------------------------------------
+    def submit(self, tokens, max_new_tokens=16, eos_id=-1) -> Future:
+        r = Request(np.asarray(tokens, np.int32), max_new_tokens, eos_id)
+        self.queue.put(r)
+        self.metrics["requests"] += 1
+        return r.future
+
+    # -- batching loop ----------------------------------------------------
+    def _admit(self):
+        """Fill free slots: run a batch-1 prefill for the request's prompt
+        and scatter its cache row into this engine's slot (every cache leaf
+        has batch at axis 1: (layers, B, ...))."""
+        for slot in range(self.slots):
+            if self.active[slot] is not None:
+                continue
+            try:
+                r = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            r.slot = slot
+            _, one_cache = self.model.prefill(
+                self.params, jnp.asarray(r.tokens, jnp.int32)[None, :],
+                self.max_seq)
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache, one_cache)
+            self.pos[slot] = len(r.tokens) - 1
+            self.active[slot] = r
+            self.metrics["prefills"] += 1
+
+    def step(self) -> int:
+        """One fused decode step for all active slots. Returns #active."""
+        self._admit()
+        active = [i for i in range(self.slots) if self.active[i] is not None]
+        if not active:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in range(self.slots):
+            r = self.active[i]
+            if r is not None:
+                toks[i, 0] = (r.generated[-1] if r.generated
+                              else int(r.tokens[-1]))
+        pos = np.maximum(self.pos, 0).astype(np.int32)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size],
+                                            axis=-1))
+        self.metrics["decode_steps"] += 1
+        for i in active:
+            r = self.active[i]
+            tok = int(next_tokens[i])
+            r.generated.append(tok)
+            self.metrics["tokens"] += 1
+            self.pos[i] += 1
+            done = (len(r.generated) >= r.max_new_tokens or tok == r.eos_id
+                    or self.pos[i] + 1 >= self.max_seq)
+            if done:
+                r.future.set_result(np.asarray(r.generated, np.int32))
+                self.active[i] = None
+                self.pos[i] = -1
+        return len(active)
+
+    def run_until_idle(self, max_steps: int = 10_000):
+        steps = 0
+        while (not self.queue.empty() or any(a is not None
+                                             for a in self.active)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving loop did not drain")
+        return steps
+
+    @property
+    def load(self) -> int:
+        return self.queue.qsize() + sum(a is not None for a in self.active)
+
+
+class EdgeRouter:
+    """Traefik analogue: least-loaded dispatch over engine replicas."""
+
+    def __init__(self, engines: List[ServingEngine]):
+        assert engines
+        self.engines = engines
+        self._rr = itertools.cycle(range(len(engines)))
+
+    def submit(self, tokens, **kw) -> Future:
+        eng = min(self.engines, key=lambda e: e.load)
+        return eng.submit(tokens, **kw)
+
+    def drain(self):
+        for e in self.engines:
+            e.run_until_idle()
+
+    def metrics(self):
+        out = {}
+        for e in self.engines:
+            out[e.name] = dict(e.metrics)
+        return out
+
+
+def greedy_generate(model, params, prompt: np.ndarray, max_new_tokens: int,
+                    max_seq: int) -> np.ndarray:
+    """Reference generation: prefill + stepwise decode (oracle for tests)."""
+    cache, _ = model.init_cache(1, max_seq)
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, cache = model.prefill(params, toks, max_seq)
+    out = []
+    last = int(jnp.argmax(logits[0, -1, :model.cfg.vocab_size]))
+    out.append(last)
+    pos = len(prompt)
+    for _ in range(max_new_tokens - 1):
+        logits, cache = model.decode(
+            params, cache, jnp.asarray([[last]], jnp.int32),
+            jnp.asarray([pos], jnp.int32))
+        last = int(jnp.argmax(logits[0, 0, :model.cfg.vocab_size]))
+        out.append(last)
+        pos += 1
+    return np.asarray(out, np.int32)

@@ -1,0 +1,139 @@
+"""Loss + train step with microbatched gradient accumulation.
+
+The microbatch count is chosen adaptively so per-device residual activations
+(one (mb, S, d) carry per scanned layer) fit the HBM budget — this is what
+makes train_4k at global_batch=256 fit 16GB/chip for the 27–400B configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def cross_entropy(logits, labels, vocab_size: int, label_mask=None):
+    """logits: (B, S, Vp) f32; labels: (B, S) int32. Masks padded vocab."""
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        pad_mask = jnp.arange(vp) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if label_mask is not None:
+        return jnp.sum(nll * label_mask) / jnp.maximum(label_mask.sum(), 1)
+    return jnp.mean(nll)
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig, dp: int,
+                      hbm_budget_bytes: float = 4e9) -> int:
+    """Smallest power-of-two microbatch count whose per-device residual
+    footprint (L x (B/mb/dp) x S x d x 2B) fits the budget."""
+    if shape.kind != "train":
+        return 1
+    b_loc = max(shape.global_batch // dp, 1)
+    per_mb = cfg.num_layers * shape.seq_len * cfg.d_model * 2
+    if cfg.ssm is not None:
+        # SSD dual-form working set: L/M decay matrices are
+        # (nc, nh, c, c) f32 per layer = S*c*nh*4 bytes (x2 tensors),
+        # alive during each layer's bwd recompute
+        nh = cfg.ssm.num_heads(cfg.d_model)
+        layers_live = cfg.num_layers if cfg.family == "hybrid" else 4
+        per_mb += 2 * shape.seq_len * cfg.ssm.chunk_size * nh * 4 * layers_live
+    mb = 1
+    while mb < b_loc and b_loc // mb * per_mb > hbm_budget_bytes:
+        mb *= 2
+    return mb
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    aux_coef: float = 0.01
+
+
+def make_loss_fn(model, cfg: ModelConfig, ts: TrainStepConfig):
+    def loss_fn(params, inputs, labels):
+        logits, aux = model.forward(params, inputs)
+        loss = cross_entropy(logits, labels, cfg.vocab_size)
+        return loss + ts.aux_coef * aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig,
+                    ts: TrainStepConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}; batch = {"inputs": (B, S[, d]),
+    "labels": (B, S)}. B must be divisible by ts.microbatches. Padded-head
+    archs (llama4/musicgen under 16-way TP) get their padded q-head slices
+    grad-masked so the padding never becomes live capacity.
+    """
+    loss_fn = make_loss_fn(model, cfg, ts)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    adt = jnp.dtype(opt_cfg.grad_accum_dtype)
+
+    def mask_grads(params, grads):
+        masks = getattr(model, "grad_masks", lambda p: None)(params)
+        if masks is None:
+            return grads
+        return jax.tree.map(lambda g, m: g * jnp.asarray(m, g.dtype), grads,
+                            masks)
+
+    def single(params, batch):
+        (tot, (loss, aux)), grads = grad_fn(params, batch["inputs"],
+                                            batch["labels"])
+        return grads, loss, aux
+
+    def accumulate(params, batch):
+        n = ts.microbatches
+        resh = lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        mbs = jax.tree.map(resh, batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+
+        def body(carry, mb):
+            g_acc, loss_acc, aux_acc = carry
+            (tot, (loss, aux)), grads = grad_fn(params, mb["inputs"],
+                                                mb["labels"])
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(adt) / n, g_acc, grads)
+            return (g_acc, loss_acc + loss / n, aux_acc + aux / n), None
+
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            mbs)
+        return grads, loss, aux
+
+    def train_step(state, batch):
+        params = state["params"]
+        if ts.microbatches > 1:
+            grads, loss, aux = accumulate(params, batch)
+        else:
+            grads, loss, aux = single(params, batch)
+        grads = mask_grads(params, grads)
+        new_params, new_opt, stats = adamw.update(
+            grads, state["opt"], params, opt_cfg)
+        metrics = {"loss": loss, "aux_loss": aux, **stats}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(model, opt_cfg: adamw.OptimizerConfig, key):
+    params, axes = model.init(key)
+    opt = adamw.init(params, opt_cfg)
+    return {"params": params, "opt": opt}, axes
+
+
+def state_axes(params_axes):
+    """Logical axes for the full train state given the params axes tree."""
+    return {
+        "params": params_axes,
+        "opt": {"m": params_axes, "v": params_axes, "count": ()},
+    }

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# NOTE: device count is NOT forced here — smoke tests see the 1 real CPU
+# device. Multi-device tests spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,104 @@
+"""Attention core equivalences + hypothesis property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import layers as L
+
+
+def _cfg(**kw):
+    return dataclasses.replace(reduced(get_config("yi-9b")), **kw)
+
+
+def _qkv(s=96, h=4, kv=2, d=32, scale=1.0, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, s, h, d)) * scale
+    k = jax.random.normal(ks[1], (2, s, kv, d)) * scale
+    v = jax.random.normal(ks[2], (2, s, kv, d)) * scale
+    return q, k, v
+
+
+def test_blocked_matches_naive():
+    cfg = _cfg()
+    q, k, v = _qkv()
+    a = L.attention_naive(cfg, q, k, v)
+    b = L.attention_blocked(cfg, q, k, v, block=32)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(block=st.sampled_from([16, 24, 32, 48, 96]),
+       window=st.sampled_from([0, 16, 40]))
+def test_blocked_blocksize_invariance(block, window):
+    """Online softmax must be exactly invariant to KV block size."""
+    cfg = _cfg()
+    q, k, v = _qkv()
+    ref = L.attention_naive(cfg, q, k, v, window=window)
+    out = L.attention_blocked(cfg, q, k, v, block=block, window=window)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_local_matches_naive_window():
+    cfg = _cfg()
+    q, k, v = _qkv(s=128)
+    ref = L.attention_naive(cfg, q, k, v, window=32)
+    out = L.attention_local(cfg, q, k, v, window=32, q_block=32)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_softcap_applied():
+    cfg = _cfg(attn_softcap=5.0)
+    q, k, v = _qkv(scale=3.0)
+    capped = L.attention_naive(cfg, q, k, v)
+    uncapped = L.attention_naive(_cfg(), q, k, v)
+    assert float(jnp.abs(capped - uncapped).max()) > 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(pos=st.integers(0, 500), w=st.sampled_from([4, 16, 64]),
+       slot=st.integers(0, 63))
+def test_rolling_cache_slot_math(pos, w, slot):
+    """Slot s of a rolling window-W cache holds absolute position
+    p = pos - ((pos - s) mod W): p ≡ s (mod W), p in (pos-W, pos]."""
+    if slot >= w:
+        slot %= w
+    p = pos - ((pos - slot) % w)
+    assert p % w == slot % w
+    assert pos - w < p <= pos
+
+
+def test_expand_kv_mapping():
+    # qwen-style h=8 kv=2 -> groups of 4; padded llama-style 5 heads kv=1
+    m = L.kv_head_map(8, 2, 8)
+    assert list(np.asarray(m)) == [0] * 4 + [1] * 4
+    m2 = L.kv_head_map(40, 8, 48)
+    assert list(np.asarray(m2[:10])) == [0, 0, 0, 0, 0, 1, 1, 1, 1, 1]
+    assert int(m2.max()) == 7
+
+
+def test_padded_heads_are_inert():
+    """Zero-padded q-head slices must not change attention output."""
+    cfg = _cfg()
+    k1 = jax.random.PRNGKey(3)
+    p8, _ = L.attn_init(k1, cfg, jnp.float32)           # h=4 (cfg)
+    p_pad, _ = L.attn_init(k1, cfg, jnp.float32, h_pad=6)
+    # copy the real heads into the padded params
+    p_pad["wq"] = p_pad["wq"].at[:, :4].set(p8["wq"]) \
+        .at[:, 4:].set(0.0)
+    p_pad["wo"] = p_pad["wo"].at[:4].set(p8["wo"]).at[4:].set(0.0)
+    p_pad["wk"], p_pad["wv"] = p8["wk"], p8["wv"]
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    pos = jnp.arange(16)[None]
+    q1, k_, v_ = L.qkv_proj(p8, cfg, x, pos, 10000.0)
+    q2, _, _ = L.qkv_proj(p_pad, cfg, x, pos, 10000.0)
+    hm = L.kv_head_map(4, cfg.num_kv_heads, 6)
+    a1 = L.attention_naive(cfg, q1, k_, v_)
+    a2 = L.attention_naive(cfg, q2, L.expand_kv(k_, hm), L.expand_kv(v_, hm))
+    o1 = jnp.einsum("bshk,hkd->bsd", a1, p8["wo"])
+    o2 = jnp.einsum("bshk,hkd->bsd", a2, p_pad["wo"])
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)

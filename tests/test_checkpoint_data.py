@@ -1,0 +1,71 @@
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLMData
+
+
+def _state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.bfloat16)},
+            "opt": {"count": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path), num_servers=2)
+    state = _state()
+    store.save(state, step=3, blocking=True)
+    assert store.latest_step() == 3
+    like = jax.tree.map(jnp.zeros_like, state)
+    back = store.restore(like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_commit_and_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), num_servers=2)
+    for s in (1, 2, 3, 4):
+        store.save(_state(), step=s)
+    store.wait()
+    assert store.latest_step() == 4
+    store.gc(keep_last=2)
+    assert store.latest_step() == 4
+    back = store.restore(_state(), step=3)
+    assert back is not None
+    try:
+        store.restore(_state(), step=1)
+        raise AssertionError("step 1 should be gone")
+    except FileNotFoundError:
+        pass
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    d = store.step_dir(9)
+    d.mkdir(parents=True)
+    (d / "garbage.npy").write_bytes(b"xx")          # no COMMITTED marker
+    assert store.latest_step() is None
+
+
+def test_data_determinism_and_host_sharding():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8)
+    a = SyntheticLMData(cfg, host_id=0, num_hosts=2)
+    b = SyntheticLMData(cfg, host_id=1, num_hosts=2)
+    a1, a2 = a.batch(5), a.batch(5)
+    np.testing.assert_array_equal(a1["inputs"], a2["inputs"])  # deterministic
+    assert not np.array_equal(a1["inputs"], b.batch(5)["inputs"])  # disjoint
+    assert a1["inputs"].shape == (4, 32)
+    assert (a1["inputs"] > 0).all() and (a1["inputs"] < 100).all()
+    # next-token alignment
+    full = np.concatenate([a1["inputs"], a1["labels"][:, -1:]], axis=1)
+    np.testing.assert_array_equal(full[:, 1:], a1["labels"])
+
+
+def test_prefetcher_preserves_order():
+    it = iter([{"x": np.full(2, i)} for i in range(10)])
+    out = [b["x"][0] for b in Prefetcher(it, depth=3)]
+    assert out == list(range(10))

@@ -1,0 +1,80 @@
+import json
+import time
+
+import pytest
+
+import repro.core.services  # noqa: F401
+from repro.core.deployment import (CentralizedDeployer, DecentralizedDeployer,
+                                   ImageCache, node_roles)
+from repro.core.vre import VREConfig, VirtualResearchEnvironment
+from repro import cli
+
+
+def test_node_roles_ratio():
+    roles = node_roles(9)
+    assert roles[0] == "master+edge"
+    assert roles[1:6] == ["service"] * 5
+    assert roles[6:9] == ["storage"] * 3
+
+
+def test_image_cache_hit_miss(tmp_path):
+    cache = ImageCache(str(tmp_path))
+    calls = {"n": 0}
+
+    def build():
+        calls["n"] += 1
+        return {"artifact": 42}
+
+    v1, hit1 = cache.get_or_build("svc/a", build)
+    v2, hit2 = cache.get_or_build("svc/a", build)
+    assert v1 == v2 == {"artifact": 42}
+    assert (hit1, hit2) == (False, True)
+    assert calls["n"] == 1
+
+
+def test_decentralized_beats_centralized(tmp_path):
+    """With identical per-node work, decentralized wall time must scale far
+    better (the paper's Fig. 7 effect, modulo simulated RTT)."""
+    def ctx(node_id, role):
+        time.sleep(0.004)          # contextualization work per node
+        return {}
+
+    dec = DecentralizedDeployer(ImageCache(str(tmp_path)), rtt_s=0.02)
+    cen = CentralizedDeployer(rtt_s=0.02, pushes_per_node=2)
+    n = 16
+    r_dec = dec.deploy(n, ctx)
+    r_cen = cen.deploy(n, ctx)
+    assert r_dec.wall_s < r_cen.wall_s / 2
+    assert r_cen.modeled_network_s > r_dec.modeled_network_s
+
+
+def test_vre_lifecycle_and_endpoints(tmp_path):
+    cfg = VREConfig(name="t", mesh_shape=(1, 1),
+                    services=["volumes", "data", "dashboard"],
+                    arch="yi-9b", workdir=str(tmp_path))
+    vre = VirtualResearchEnvironment(cfg)
+    rep = vre.instantiate()
+    assert vre.state == "RUNNING"
+    assert vre.endpoints.resolve("volumes").startswith("vre://t/")
+    st = vre.status()
+    assert set(st["services"]) == {"volumes", "data", "dashboard"}
+    assert all(s["healthy"] for s in st["services"].values())
+    vre.destroy()
+    assert vre.state == "DESTROYED"
+    with pytest.raises(RuntimeError):
+        vre.service("volumes")
+
+
+def test_cli_init_apply_status_destroy(tmp_path, capsys):
+    d = tmp_path / "dep"
+    cli.main(["init", "cpu", str(d)])
+    cfg = json.loads((d / "vre.json").read_text())
+    cfg["services"] = ["volumes", "dashboard"]
+    (d / "vre.json").write_text(json.dumps(cfg))
+    cli.main(["apply", "--dir", str(d)])
+    assert (d / "manifest.json").exists()
+    cli.main(["install", "workflows", "--dir", str(d)])
+    assert "workflows" in json.loads((d / "vre.json").read_text())["services"]
+    cli.main(["status", "--dir", str(d)])
+    cli.main(["destroy", "--dir", str(d)])
+    assert not (d / "manifest.json").exists()

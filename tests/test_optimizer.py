@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.OptimizerConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                                weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init(params, cfg)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(150):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw.update(g, state, params, cfg)
+    np.testing.assert_allclose(params["w"], target, atol=0.1)
+
+
+def test_clipping_caps_update():
+    cfg = adamw.OptimizerConfig(clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    _, _, stats = adamw.update({"w": jnp.full(3, 1e6)}, state, params, cfg)
+    assert float(stats["grad_norm"]) > 1e5       # reported pre-clip
+
+
+def test_bf16_moments_store_dtype():
+    cfg = adamw.OptimizerConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4))}
+    state = adamw.init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    _, state2, _ = adamw.update({"w": jnp.ones((4, 4))}, state, params, cfg)
+    assert state2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_shape():
+    cfg = adamw.OptimizerConfig(peak_lr=1e-3, warmup_steps=10,
+                                total_steps=100, min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] < lrs[2]
+    assert abs(lrs[2] - 1e-3) < 1e-9
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 1e-4) < 1e-8
+
+
+def test_no_decay_on_1d_params():
+    cfg = adamw.OptimizerConfig(weight_decay=1.0, peak_lr=0.0,
+                                warmup_steps=0, total_steps=1)
+    # lr=0 -> no update at all regardless of decay
+    params = {"norm": jnp.ones(4), "w": jnp.ones((4, 4))}
+    state = adamw.init(params, cfg)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw.update(zero_g, state, params, cfg)
+    np.testing.assert_allclose(p2["norm"], params["norm"])

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.configs import SHAPES, get_config, ARCHS
+from repro.data.pipeline import split_partitions
+from repro.distributed.collectives import dequantize_int8, quantize_int8
+from repro.models.layers import rms_norm, softcap
+from repro.models.mamba2 import _segsum
+from repro.training.train_step import cross_entropy, pick_microbatches
+
+f32arr = hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                 min_side=2, max_side=16),
+                    elements=st.floats(-30, 30, width=32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(f32arr)
+def test_cross_entropy_shift_invariance(logits_np):
+    """xent(logits + c) == xent(logits) (softmax shift invariance)."""
+    logits = jnp.asarray(logits_np)[None]            # (1, S, V)
+    labels = jnp.zeros((1, logits.shape[1]), jnp.int32)
+    a = cross_entropy(logits, labels, logits.shape[-1])
+    b = cross_entropy(logits + 7.5, labels, logits.shape[-1])
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-5)
+
+
+def test_cross_entropy_vocab_padding():
+    """Padded vocab columns must not change the loss."""
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (2, 8, 50))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 50)
+    padded = jnp.pad(logits, ((0, 0), (0, 0), (0, 14)),
+                     constant_values=37.0)   # junk in pad columns
+    a = cross_entropy(logits, labels, 50)
+    b = cross_entropy(padded, labels, 50)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(1.0, 100.0), f32arr)
+def test_softcap_bounded_and_monotone(cap, x):
+    y = np.asarray(softcap(jnp.asarray(x), cap))
+    assert np.all(np.abs(y) <= cap + 1e-4)
+    flat = np.sort(x.ravel())
+    yf = np.asarray(softcap(jnp.asarray(flat), cap))
+    assert np.all(np.diff(yf) >= -1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(f32arr)
+def test_quantize_roundtrip_error_bound(g):
+    q, scale = quantize_int8(jnp.asarray(g))
+    back = np.asarray(dequantize_int8(q, scale))
+    assert np.all(np.abs(back - g) <= float(scale) * 0.5 + 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12))
+def test_segsum_matches_direct(c):
+    a = jax.random.normal(jax.random.PRNGKey(c), (c,)) * 0.3
+    out = np.asarray(_segsum(a))
+    for i in range(c):
+        for j in range(c):
+            if i >= j:
+                expect = float(np.sum(np.asarray(a)[j + 1:i + 1]))
+                np.testing.assert_allclose(out[i, j], expect, atol=1e-5)
+            else:
+                assert out[i, j] == -np.inf
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 1000))
+def test_split_partitions_reassembles(n, size):
+    data = np.arange(size)
+    parts = split_partitions(data, n)
+    assert len(parts) == n
+    np.testing.assert_array_equal(np.concatenate(parts), data)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1          # paper's equal split
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(ARCHS), st.sampled_from(list(SHAPES)),
+       st.sampled_from([16, 32]))
+def test_pick_microbatches_bounds(arch, shape_name, dp):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mb = pick_microbatches(cfg, shape, dp)
+    b_loc = max(shape.global_batch // dp, 1)
+    assert 1 <= mb <= max(b_loc, 1)
+    assert b_loc % mb == 0 or mb == 1      # powers of two divide b_loc
+    if shape.kind != "train":
+        assert mb == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(hnp.arrays(np.float32, (4, 32), elements=st.floats(-5, 5, width=32)))
+def test_rms_norm_unit_rms(x):
+    """rms_norm with zero weight (scale 1) yields unit RMS rows."""
+    out = np.asarray(rms_norm(jnp.asarray(x), jnp.zeros((32,))),
+                     np.float32)
+    rms = np.sqrt((out ** 2).mean(-1))
+    finite = np.abs(x).max(-1) > 1e-3
+    np.testing.assert_allclose(rms[finite], 1.0, atol=2e-2)

@@ -1,0 +1,52 @@
+"""End-to-end behaviour: a full on-demand VRE session — instantiate, run a
+training service with checkpointing, kill it, re-instantiate (warm cache),
+restore, serve — the paper's usage pattern."""
+import numpy as np
+import pytest
+
+import repro.core.services  # noqa: F401
+from repro.core.vre import VREConfig, VirtualResearchEnvironment
+
+
+def test_on_demand_vre_session(tmp_path):
+    cfg = VREConfig(name="session", mesh_shape=(1, 1),
+                    services=["volumes", "data", "lm-trainer", "workflows",
+                              "dashboard"],
+                    arch="granite-moe-1b-a400m", workdir=str(tmp_path),
+                    extra={"global_batch": 4, "seq_len": 32, "workers": 3})
+    vre = VirtualResearchEnvironment(cfg)
+    r1 = vre.instantiate()
+
+    # 1) train a few steps, checkpoint through the volume service
+    trainer = vre.service("lm-trainer")
+    data = vre.service("data")
+    losses = trainer.train_steps(data, 4)
+    assert all(np.isfinite(l) for l in losses)
+    store = vre.service("volumes")
+    store.save(trainer.state, step=4, blocking=True)
+
+    # 2) run a workflow of short-lived tools
+    wfs = vre.service("workflows")
+    wf = wfs.new("analysis")
+    wf.map_partitions("stat", lambda p: float(p.sum()), np.arange(100.0), 5,
+                      reducer=sum)
+    res = wfs.run(wf)
+    assert abs(res["stat:gather"] - 4950.0) < 1e-9
+
+    # 3) destroy (on-demand: release everything)
+    vre.destroy()
+    assert vre.state == "DESTROYED"
+
+    # 4) re-instantiate (image cache warm) and restore training state
+    vre2 = VirtualResearchEnvironment(cfg)
+    r2 = vre2.instantiate()
+    t2 = vre2.service("lm-trainer")
+    t2.state = vre2.service("volumes").restore(t2.state, step=4)
+    more = t2.train_steps(vre2.service("data"), 2)
+    assert all(np.isfinite(l) for l in more)
+
+    # monitoring captured the whole session
+    dash = vre2.service("dashboard")
+    events = dash.summary()
+    assert any("lm-trainer" in k for k in events["counters"])
+    vre2.destroy()

@@ -1,0 +1,99 @@
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.monitoring import Monitor
+from repro.core.scheduler import ClusterScheduler
+from repro.core.workflow import Workflow
+
+
+def test_toposort_and_local_run():
+    wf = Workflow("t")
+    wf.add("a", lambda: 1)
+    wf.add("b", lambda a: a + 1, deps=["a"])
+    wf.add("c", lambda a, b: a + b, deps=["a", "b"])
+    res = wf.run_local()
+    assert res == {"a": 1, "b": 2, "c": 3}
+
+
+def test_cycle_detection():
+    wf = Workflow("cyc")
+    wf.add("a", lambda b: b, deps=["b"])
+    wf.add("b", lambda a: a, deps=["a"])
+    with pytest.raises(ValueError):
+        wf.toposort()
+
+
+def test_scheduler_matches_local_reference():
+    wf = Workflow("m")
+    data = np.arange(500, dtype=np.float64)
+    wf.map_partitions("sq", lambda p: float((p ** 2).sum()), data, 7,
+                      reducer=sum)
+    local = wf.run_local()
+    wf2 = Workflow("m")
+    wf2.map_partitions("sq", lambda p: float((p ** 2).sum()), data, 7,
+                       reducer=sum)
+    dist = ClusterScheduler(num_workers=4).run(wf2)
+    assert abs(local["sq:gather"] - dist["sq:gather"]) < 1e-9
+
+
+def test_failure_rescheduling_and_exhaustion():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    wf = Workflow("f")
+    wf.add("x", flaky, retries=3)
+    sched = ClusterScheduler(num_workers=3)
+    assert sched.run(wf)["x"] == "ok"
+    assert sched.stats["rescheduled"] == 2
+
+    wf2 = Workflow("f2")
+    wf2.add("x", lambda: (_ for _ in ()).throw(RuntimeError("always")),
+            retries=1)
+    with pytest.raises(RuntimeError):
+        ClusterScheduler(num_workers=3).run(wf2)
+
+
+def test_dead_worker_does_not_block_dag():
+    sched = ClusterScheduler(num_workers=3)
+    sched.kill_worker(0)
+    wf = Workflow("d")
+    for i in range(6):
+        wf.add(f"t{i}", lambda i=i: i * i, group="t")
+    res = sched.run(wf)
+    assert res == {f"t{i}": i * i for i in range(6)}
+
+
+def test_straggler_speculation_wins():
+    sched = ClusterScheduler(num_workers=4, speculation_factor=2.0,
+                             speculation_min_s=0.05)
+    slow_once = {"fired": False}
+    lock = threading.Lock()
+
+    def tool(i):
+        with lock:
+            first = not slow_once["fired"] and i == 7
+            if first:
+                slow_once["fired"] = True
+        if first:
+            time.sleep(1.0)           # straggling attempt
+        else:
+            time.sleep(0.01)
+        return i
+
+    wf = Workflow("s")
+    for i in range(8):
+        wf.add(f"p{i}", tool, args=(i,), group="pool")
+    t0 = time.perf_counter()
+    res = sched.run(wf)
+    dt = time.perf_counter() - t0
+    assert res[f"p7"] == 7
+    assert sched.stats["speculative"] >= 1
+    assert dt < 1.0                   # didn't wait for the straggler

@@ -1,35 +1,78 @@
-"""Extra: serving-engine throughput/latency microbenchmark (edge router over
-replicas; the paper has no serving figure, so this is a framework extra)."""
+"""Serving-plane benchmark: open-loop Poisson load over the async replica
+plane (batched prefill, background decode loops). Reports the serving
+contract — ``tok_per_s``, ``ttft_p50_s``, ``latency_p95_s`` — plus prefill
+batching efficiency and a kill-one-replica failover scenario that must still
+complete 100% of requests."""
 from __future__ import annotations
 
 import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.models.model import build_model
-from repro.serving.engine import EdgeRouter, ServingEngine
+from repro.core.monitoring import Monitor
+from repro.launch.serve import (build_replicaset, make_prompts, run_load,
+                                serve_report, poisson_load)
+
+
+def _throughput(fast: bool) -> dict:
+    monitor = Monitor()
+    rs = build_replicaset("yi-9b", replicas=2, slots=4, max_seq=96,
+                          monitor=monitor)
+    vocab = rs.engines[0].cfg.vocab_size
+    rs.start()
+    rng = np.random.default_rng(0)
+    n_req = 6 if fast else 16
+    prompts = make_prompts(n_req, vocab, rng, lo=4, hi=12)
+    try:
+        # open-loop: arrival rate chosen to keep slots saturated
+        report = run_load(rs, prompts, rate_rps=50.0, max_new_tokens=8,
+                          rng=rng)
+    finally:
+        rs.stop()
+    return report
+
+
+def _failover(fast: bool) -> dict:
+    """Kill one replica mid-flight; the ReplicaSet must reschedule its
+    requests and still complete all of them."""
+    monitor = Monitor()
+    rs = build_replicaset("yi-9b", replicas=2, slots=2, max_seq=96,
+                          monitor=monitor)
+    rs.check_interval = 0.02
+    vocab = rs.engines[0].cfg.vocab_size
+    rs.start()
+    rng = np.random.default_rng(1)
+    n_req = 6 if fast else 12
+    prompts = make_prompts(n_req, vocab, rng, lo=4, hi=10)
+    try:
+        w = rs.submit_request(prompts[0], max_new_tokens=2)   # compile warmup
+        w.future.result(timeout=300)
+        baseline = dict(rs.metrics()["total"])
+        t0 = time.perf_counter()
+        reqs = poisson_load(rs.submit_request, prompts, 100.0, rng,
+                            max_new_tokens=8)
+        rs.engines[0].kill()                    # container crash mid-flight
+        for r in reqs:
+            r.future.result(timeout=300)
+        wall = time.perf_counter() - t0
+        rep = serve_report(reqs, wall, rs, baseline)
+    finally:
+        rs.stop()
+    rep["all_completed"] = rep["completed"] == rep["requests"]
+    return rep
 
 
 def main(fast: bool = False):
-    cfg = reduced(get_config("yi-9b"))
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    engines = [ServingEngine(model, params, slots=4, max_seq=96,
-                             name=f"r{i}") for i in range(2)]
-    router = EdgeRouter(engines)
-    rng = np.random.default_rng(0)
-    n_req = 6 if fast else 16
-    t0 = time.perf_counter()
-    futs = [router.submit(rng.integers(1, cfg.vocab_size, size=8),
-                          max_new_tokens=8) for _ in range(n_req)]
-    router.drain()
-    dt = time.perf_counter() - t0
-    toks = sum(len(f.result()) for f in futs)
-    return {"requests": n_req, "tokens": toks, "wall_s": dt,
-            "tok_per_s": toks / dt}
+    tp = _throughput(fast)
+    fo = _failover(fast)
+    return {
+        **tp,
+        "failover": {"requests": fo["requests"],
+                     "completed": fo["completed"],
+                     "failovers": fo["failovers"],
+                     "all_completed": fo["all_completed"]},
+    }
 
 
 if __name__ == "__main__":

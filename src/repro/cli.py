@@ -4,6 +4,7 @@
   python -m repro.cli apply --dir <dir>         # instantiate the VRE
   python -m repro.cli install <package> --dir <dir>   # add a service package
   python -m repro.cli status --dir <dir>
+  python -m repro.cli serve --dir <dir>         # Poisson load over lm-server
   python -m repro.cli destroy --dir <dir>
 
 ``apply`` performs the full deployment (mesh procurement + service
@@ -91,6 +92,30 @@ def cmd_status(args):
     print(m.read_text())
 
 
+def cmd_serve(args):
+    """Instantiate the VRE's serving plane and drive it with an open-loop
+    Poisson load; prints the serving-contract report JSON."""
+    import numpy as np
+    from repro.launch.serve import make_prompts, run_load
+
+    d = Path(args.dir)
+    vre, _ = _load_vre(d)
+    if "lm-server" not in vre.config.services:
+        vre.config.services.append("lm-server")
+    vre.instantiate()
+    try:
+        server = vre.service("lm-server")
+        rs = server.replicaset
+        rng = np.random.default_rng(args.seed)
+        prompts = make_prompts(args.requests,
+                               rs.engines[0].cfg.vocab_size, rng)
+        report = run_load(rs, prompts, rate_rps=args.rate,
+                          max_new_tokens=args.max_new, rng=rng)
+        print(json.dumps(report, indent=2))
+    finally:
+        vre.destroy()
+
+
 def cmd_destroy(args):
     d = Path(args.dir)
     m = d / "manifest.json"
@@ -116,6 +141,13 @@ def main(argv=None):
     p = sub.add_parser("status")
     p.add_argument("--dir", required=True)
     p.set_defaults(fn=cmd_status)
+    p = sub.add_parser("serve")
+    p.add_argument("--dir", required=True)
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--rate", type=float, default=4.0)
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.set_defaults(fn=cmd_serve)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)
     p.set_defaults(fn=cmd_destroy)

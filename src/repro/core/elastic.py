@@ -21,6 +21,18 @@ class ResizeReport:
     deployment: Optional[dict] = None
 
 
+def resize_if_requested(vre, state: Any = None,
+                        reshard: Optional[Callable] = None):
+    """Apply an autoscaler-requested mesh resize at a safe point. The
+    serving autoscaler records saturation via ``vre.request_resize`` (resize
+    is destructive: checkpoint -> destroy -> re-instantiate), and the driver
+    calls this between load waves. No-op when nothing is pending."""
+    if vre.pending_resize is None:
+        return None, state
+    return vre.resize(vre.pending_resize, state=state,
+                      state_reshard=reshard)
+
+
 def resize(vre, new_mesh_shape: tuple, state: Any = None,
            reshard: Optional[Callable] = None) -> ResizeReport:
     """reshard(state_like, new_mesh) -> restored state with new shardings.

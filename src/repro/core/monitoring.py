@@ -7,14 +7,15 @@ from __future__ import annotations
 import json
 import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from contextlib import contextmanager
 from pathlib import Path
 from typing import Optional
 
 
 class Monitor:
-    def __init__(self, log_path: Optional[str] = None, name: str = "vre"):
+    def __init__(self, log_path: Optional[str] = None, name: str = "vre",
+                 gauge_window: int = 256):
         self.name = name
         self.log_path = Path(log_path) if log_path else None
         if self.log_path:
@@ -23,6 +24,8 @@ class Monitor:
         self._events = []
         self._counters = defaultdict(float)
         self._timings = defaultdict(list)
+        self._gauge_window = gauge_window
+        self._gauges = defaultdict(lambda: deque(maxlen=gauge_window))
 
     def log(self, service: str, event: str, **fields):
         rec = {"t": time.time(), "service": service, "event": event, **fields}
@@ -48,6 +51,37 @@ class Monitor:
             with self._lock:
                 self._timings[(service, event)].append(dt)
             self.log(service, event + ".done", seconds=dt, **fields)
+
+    # -- rolling-window gauges -------------------------------------------
+    def gauge(self, service: str, name: str, value: float):
+        """Record a point sample (queue depth, latency, ...) into a rolling
+        window; cheap enough for per-decode-step use (no event log write)."""
+        with self._lock:
+            self._gauges[(service, name)].append(
+                (time.monotonic(), float(value)))
+
+    def gauge_stats(self, service: str, name: str,
+                    window_s: Optional[float] = None) -> dict:
+        """last/mean/p50/p95 over the retained window (optionally only the
+        trailing ``window_s`` seconds)."""
+        with self._lock:
+            pts = list(self._gauges.get((service, name), ()))
+        if window_s is not None:
+            cutoff = time.monotonic() - window_s
+            pts = [p for p in pts if p[0] >= cutoff]
+        if not pts:
+            return {"n": 0, "last": None, "mean": None, "p50": None,
+                    "p95": None}
+        vals = sorted(v for _, v in pts)
+        n = len(vals)
+        return {"n": n, "last": pts[-1][1], "mean": sum(vals) / n,
+                "p50": vals[n // 2], "p95": vals[min(n - 1,
+                                                     int(0.95 * n))]}
+
+    def gauges(self) -> dict:
+        with self._lock:
+            keys = list(self._gauges)
+        return {f"{s}/{g}": self.gauge_stats(s, g) for s, g in keys}
 
     # -- dashboards ------------------------------------------------------
     def counters(self) -> dict:
@@ -76,4 +110,5 @@ class Monitor:
         return evs
 
     def summarize(self) -> dict:
-        return {"counters": self.counters(), "timings": self.timing_summary()}
+        return {"counters": self.counters(), "timings": self.timing_summary(),
+                "gauges": self.gauges()}

@@ -15,16 +15,77 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 
+class ServiceHandle:
+    """Uniform microservice lifecycle (paper §3.1.2): every deployed service
+    exposes the same ``start / stop / health / scale / metrics`` surface, so
+    the orchestrator (VRE) can manage heterogeneous services — trainers,
+    serving replica sets, volumes — without per-service special cases.
+
+    Domain methods of the wrapped ``instance`` remain reachable through
+    attribute delegation, so ``vre.service("volumes").save(...)`` keeps
+    working; subclasses override lifecycle hooks as needed."""
+
+    def __init__(self, name: str, kind: str, instance: Any = None):
+        self.name = name
+        self.kind = kind
+        self.instance = instance
+
+    # -- lifecycle hooks (override in subclasses) -------------------------
+    def start(self):
+        inner = getattr(self.instance, "start", None)
+        if callable(inner):
+            inner()
+        return self
+
+    def stop(self):
+        inner = getattr(self.instance, "stop", None)
+        if callable(inner):
+            inner()
+
+    def health(self) -> bool:
+        h = getattr(self.instance, "healthy", True)
+        return h() if callable(h) else bool(h)
+
+    def scale(self, n: int) -> int:
+        """Resize to ``n`` replicas/workers; returns the resulting size.
+        Services with nothing to scale report size 1."""
+        inner = getattr(self.instance, "scale_to", None)
+        if callable(inner):
+            return inner(n)
+        return 1
+
+    def metrics(self) -> dict:
+        inner = getattr(self.instance, "metrics", None)
+        if callable(inner):
+            return inner()
+        return dict(inner) if isinstance(inner, dict) else {}
+
+    # -- delegation -------------------------------------------------------
+    def __getattr__(self, item):
+        if item.startswith("_") or self.__dict__.get("instance") is None:
+            raise AttributeError(item)
+        return getattr(self.instance, item)
+
+    def __iter__(self):
+        return iter(self.instance)
+
+    def __repr__(self):
+        return (f"<ServiceHandle {self.name} kind={self.kind} "
+                f"instance={type(self.instance).__name__}>")
+
+
 @dataclasses.dataclass
 class Service:
     name: str
     kind: str
-    instance: Any                     # the live object (engine, trainer, ...)
+    instance: Any                     # ServiceHandle (or bare live object)
     endpoint: str
     long_running: bool = True
     started_at: float = dataclasses.field(default_factory=time.time)
 
     def health(self) -> bool:
+        if isinstance(self.instance, ServiceHandle):
+            return self.instance.health()
         h = getattr(self.instance, "healthy", True)
         return h() if callable(h) else bool(h)
 

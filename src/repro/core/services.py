@@ -2,27 +2,27 @@
 package set): data pipeline, LM trainer, serving engines + edge router,
 workflow system, volumes (checkpoint store), monitoring dashboard.
 
-Each builder returns a live instance given the VREContext; builders use the
-VRE's image cache for their expensive artifacts where possible.
+Each builder returns a ``ServiceHandle`` — the uniform lifecycle protocol
+(``start/stop/health/scale/metrics``) the VRE orchestrator manages — wrapping
+the live instance; builders use the VRE's image cache for their expensive
+artifacts where possible.
 """
 from __future__ import annotations
-
-import dataclasses
-from pathlib import Path
-from types import SimpleNamespace
 
 import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_config, reduced
-from repro.core.registry import register_service
+from repro.core.registry import ServiceHandle, register_service
 from repro.core.scheduler import ClusterScheduler
 from repro.core.workflow import Workflow
 from repro.data.pipeline import DataConfig, SyntheticLMData
 from repro.models.model import build_model
 from repro.optim.adamw import OptimizerConfig
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.engine import EdgeRouter, ServingEngine
+from repro.serving.replica import ReplicaSet
 from repro.training.train_step import (TrainStepConfig, init_state,
                                        make_train_step)
 
@@ -38,8 +38,9 @@ def _model_cfg(ctx):
 @register_service("volumes", "storage",
                   description="GlusterFS analogue: sharded checkpoint store")
 def build_volumes(ctx):
-    return CheckpointStore(str(ctx.workdir / ctx.config.name / "volumes"),
-                           num_servers=ctx.config.storage_servers)
+    store = CheckpointStore(str(ctx.workdir / ctx.config.name / "volumes"),
+                            num_servers=ctx.config.storage_servers)
+    return ServiceHandle("volumes", "storage", store)
 
 
 @register_service("data", "data",
@@ -48,9 +49,44 @@ def build_data(ctx):
     cfg = _model_cfg(ctx)
     batch = int(ctx.config.extra.get("global_batch", 8))
     seq = int(ctx.config.extra.get("seq_len", 64))
-    return SyntheticLMData(DataConfig(
+    data = SyntheticLMData(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
         embeddings_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0))
+    return ServiceHandle("data", "data", data)
+
+
+class TrainerService(ServiceHandle):
+    """LM training service: jitted train_step over mutable optimizer state."""
+
+    def __init__(self, ctx, cfg, model, state, axes, jit_step):
+        super().__init__("lm-trainer", "train", model)
+        self.ctx = ctx
+        self.cfg = cfg
+        self.model = model
+        self.state = state
+        self.axes = axes
+        self.step = 0
+        self.history = []
+        self._jit_step = jit_step
+
+    def train_steps(self, data, n: int):
+        it = iter(data)
+        for _ in range(n):
+            batch = jax.tree.map(jax.numpy.asarray, next(it))
+            self.state, metrics = self._jit_step(self.state, batch)
+            self.step += 1
+            loss = float(metrics["loss"])
+            self.history.append(loss)
+            self.ctx.monitor.log("lm-trainer", "step", step=self.step,
+                                 loss=loss)
+        return self.history[-n:]
+
+    def health(self) -> bool:
+        return not self.history or bool(np.isfinite(self.history[-1]))
+
+    def metrics(self) -> dict:
+        return {"step": self.step,
+                "loss": self.history[-1] if self.history else None}
 
 
 @register_service("lm-trainer", "train",
@@ -64,37 +100,86 @@ def build_trainer(ctx):
                               TrainStepConfig(microbatches=mb))
     state, axes = init_state(model, opt_cfg, jax.random.PRNGKey(0))
     jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    return TrainerService(ctx, cfg, model, state, axes, jit_step)
 
-    svc = SimpleNamespace(cfg=cfg, model=model, state=state, axes=axes,
-                          step=0, history=[])
 
-    def train_steps(data, n: int):
-        it = iter(data)
-        for _ in range(n):
-            batch = jax.tree.map(jax.numpy.asarray, next(it))
-            svc.state, metrics = jit_step(svc.state, batch)
-            svc.step += 1
-            loss = float(metrics["loss"])
-            svc.history.append(loss)
-            ctx.monitor.log("lm-trainer", "step", step=svc.step, loss=loss)
-        return svc.history[-n:]
+class ServingService(ServiceHandle):
+    """Serving plane: ReplicaSet of async engines behind an edge router,
+    with an optional load-driven autoscaler."""
 
-    svc.train_steps = train_steps
-    svc.healthy = lambda: True
-    return svc
+    def __init__(self, replicaset: ReplicaSet, router: EdgeRouter,
+                 autoscaler: Autoscaler = None):
+        super().__init__("lm-server", "serve", replicaset)
+        self.replicaset = replicaset
+        self.router = router
+        self.autoscaler = autoscaler
+
+    def start(self):
+        self.replicaset.start()
+        if self.autoscaler is not None:
+            self.autoscaler.run()
+        return self
+
+    def stop(self):
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
+        self.replicaset.stop()
+
+    def health(self) -> bool:
+        return bool(self.replicaset.healthy_engines())
+
+    def scale(self, n: int) -> int:
+        return self.replicaset.scale_to(n)
+
+    def metrics(self) -> dict:
+        return self.replicaset.metrics()
+
+    def drain(self, timeout: float = 120.0):
+        self.router.drain(timeout)
 
 
 @register_service("lm-server", "serve",
-                  description="serving replicas + Traefik-style edge router")
+                  description="async serving replicas + edge router + "
+                              "autoscaler")
 def build_server(ctx):
     cfg = _model_cfg(ctx)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
     replicas = int(ctx.config.extra.get("replicas", 2))
+    slots = int(ctx.config.extra.get("slots", 2))
     max_seq = int(ctx.config.extra.get("max_seq", 128))
-    engines = [ServingEngine(model, params, slots=2, max_seq=max_seq,
-                             name=f"replica{i}") for i in range(replicas)]
-    return EdgeRouter(engines)
+
+    def factory(i: int) -> ServingEngine:
+        return ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                             name=f"replica{i}", monitor=ctx.monitor)
+
+    rs = ReplicaSet(factory, replicas=replicas, monitor=ctx.monitor)
+    router = EdgeRouter(rs)
+    autoscaler = None
+    if ctx.config.extra.get("autoscale"):
+        as_cfg = AutoscalerConfig(
+            min_replicas=int(ctx.config.extra.get("min_replicas", 1)),
+            max_replicas=int(ctx.config.extra.get("max_replicas",
+                                                  max(replicas, 4))))
+        autoscaler = Autoscaler(rs, ctx.monitor, as_cfg,
+                                resize_mesh=getattr(ctx.vre, "request_resize",
+                                                    None))
+    return ServingService(rs, router, autoscaler)
+
+
+class WorkflowService(ServiceHandle):
+    def __init__(self, scheduler: ClusterScheduler):
+        super().__init__("workflows", "workflow", scheduler)
+        self.scheduler = scheduler
+
+    def new(self, name: str) -> Workflow:
+        return Workflow(name)
+
+    def run(self, wf: Workflow):
+        return self.scheduler.run(wf)
+
+    def scale(self, n: int) -> int:
+        return getattr(self.scheduler, "num_workers", 1)
 
 
 @register_service("workflows", "workflow",
@@ -103,16 +188,21 @@ def build_workflows(ctx):
     sched = ClusterScheduler(
         num_workers=int(ctx.config.extra.get("workers", 4)),
         monitor=ctx.monitor)
+    return WorkflowService(sched)
 
-    def new(name: str) -> Workflow:
-        return Workflow(name)
 
-    return SimpleNamespace(scheduler=sched, new=new,
-                           run=lambda wf: sched.run(wf))
+class DashboardService(ServiceHandle):
+    def __init__(self, monitor):
+        super().__init__("dashboard", "monitor", monitor)
+        self.summary = monitor.summarize
+        self.events = monitor.events
+        self.gauges = monitor.gauges
+
+    def metrics(self) -> dict:
+        return self.instance.summarize()
 
 
 @register_service("dashboard", "monitor",
                   description="EFK analogue: metrics aggregation")
 def build_dashboard(ctx):
-    return SimpleNamespace(summary=ctx.monitor.summarize,
-                           events=ctx.monitor.events)
+    return DashboardService(ctx.monitor)

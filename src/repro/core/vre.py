@@ -31,8 +31,8 @@ from jax.sharding import Mesh
 from repro.core.deployment import (CentralizedDeployer, DecentralizedDeployer,
                                    DeploymentReport, ImageCache)
 from repro.core.monitoring import Monitor
-from repro.core.registry import (EndpointDirectory, Service, ServiceRegistry,
-                                 GLOBAL_REGISTRY)
+from repro.core.registry import (EndpointDirectory, Service, ServiceHandle,
+                                 ServiceRegistry, GLOBAL_REGISTRY)
 
 
 @dataclasses.dataclass
@@ -86,6 +86,7 @@ class VirtualResearchEnvironment:
         self.image_cache = ImageCache(
             str(Path(config.workdir) / "image_cache"))
         self.last_report: Optional[DeploymentReport] = None
+        self.pending_resize: Optional[tuple] = None
 
     # -- infrastructure layer ---------------------------------------------
     def _procure_mesh(self) -> Mesh:
@@ -136,6 +137,9 @@ class VirtualResearchEnvironment:
         report.phases["total_instantiate"] = time.perf_counter() - t0
         self.state = "RUNNING"
         self.last_report = report
+        for svc in self.services.values():       # uniform lifecycle: start
+            if isinstance(svc.instance, ServiceHandle):
+                svc.instance.start()
         self.monitor.log("vre", "instantiated", nodes=n_nodes,
                          wall_s=report.wall_s, mode=report.mode)
         return report
@@ -157,10 +161,39 @@ class VirtualResearchEnvironment:
             "endpoints": self.endpoints.entries(),
         }
 
+    def scale_service(self, name: str, n: int) -> int:
+        """Resize a service through the uniform lifecycle protocol."""
+        inst = self.service(name)
+        if isinstance(inst, ServiceHandle):
+            size = inst.scale(n)
+            self.monitor.log("vre", "service_scaled", service=name, size=size)
+            return size
+        raise TypeError(f"service {name!r} has no lifecycle handle")
+
+    def request_resize(self, new_mesh_shape: Optional[tuple] = None):
+        """Mark the mesh as saturated (autoscaler hook). ``resize`` is
+        destructive — it checkpoints and re-instantiates — so the request is
+        recorded for the driver to apply at a safe point rather than ripping
+        services out from under in-flight work."""
+        if new_mesh_shape is None:
+            d, *rest = self.config.mesh_shape
+            new_mesh_shape = (d * 2, *rest)
+        self.pending_resize = tuple(new_mesh_shape)
+        self.monitor.log("vre", "resize_requested",
+                         old=list(self.config.mesh_shape),
+                         new=list(new_mesh_shape))
+        return self.pending_resize
+
     def destroy(self):
         """Release everything — on-demand VREs are short-lived by design."""
         for name in list(self.services):
             self.endpoints.withdraw(name)
+        for svc in self.services.values():       # uniform lifecycle: stop
+            if isinstance(svc.instance, ServiceHandle):
+                try:
+                    svc.instance.stop()
+                except Exception:
+                    pass                         # teardown is best-effort
         self.services.clear()
         self.mesh = None
         self.state = "DESTROYED"
@@ -172,5 +205,7 @@ class VirtualResearchEnvironment:
         """Re-instantiate on a different mesh; optionally reshard ``state``
         through the volume service (see repro.core.elastic)."""
         from repro.core import elastic
-        return elastic.resize(self, new_mesh_shape, state=state,
-                              reshard=state_reshard)
+        out = elastic.resize(self, new_mesh_shape, state=state,
+                             reshard=state_reshard)
+        self.pending_resize = None
+        return out

@@ -1,0 +1,23 @@
+"""JAX version compat: ``shard_map`` moved from ``jax.experimental`` to
+``jax.shard_map`` with renamed kwargs (``check_rep``/``auto`` ->
+``check_vma``/``axis_names``). This shim exposes the new-style signature on
+either version so the distributed modules are written against one API."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

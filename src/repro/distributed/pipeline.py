@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def pipeline_forward(mesh, pp_axis: str, body: Callable, stage_params,
                      x_micro, *, layers_per_stage: int):
@@ -75,10 +77,13 @@ def pipeline_forward(mesh, pp_axis: str, body: Callable, stage_params,
         return all_outs[n_stages - 1]
 
     pspec = jax.tree.map(lambda _: P(pp_axis), stage_params)
-    return jax.shard_map(
+    # fully-manual region (no axis_names subset): partially-auto shard_map
+    # lowers axis_index through PartitionId, which the SPMD partitioner in
+    # the installed XLA rejects; in a fully-manual region it is supported
+    return shard_map(
         staged, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
-        axis_names={pp_axis}, check_vma=False,
+        check_vma=False,
     )(stage_params, x_micro)
 
 

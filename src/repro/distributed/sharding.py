@@ -156,6 +156,9 @@ class ShardingPolicy:
                 self.fallbacks.append((name, dim, mesh_axes))
                 out.append(None)
             else:
+                # canonical PartitionSpec entry: bare name, not a 1-tuple
+                if isinstance(mesh_axes, tuple) and len(mesh_axes) == 1:
+                    mesh_axes = mesh_axes[0]
                 out.append(mesh_axes)
         while out and out[-1] is None:
             out.pop()

@@ -54,12 +54,34 @@ _BRANCH_RE = re.compile(
 _GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERANDS_RE = re.compile(r"\((?P<args>%[\w.\-]+(?:,\s*%[\w.\-]+)*)\)")
 _FGC_RE = re.compile(r"feature_group_count=(\d+)")
 _WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
 
 _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
              "collective-permute")
+
+
+def _arg_shapes(line: str, op: str, shapes: dict):
+    """[(ref, type_str)] for the instruction's call operands. Handles both
+    the legacy ``op(%a, %b)`` and the typed ``op(f32[2,2]{1,0} %a, ...)``
+    operand syntax: an inline type wins, otherwise the operand's definition
+    in the same computation is looked up."""
+    start = line.find(op + "(")
+    if start < 0:
+        return []
+    start += len(op) + 1
+    end = line.find(")", start)
+    argtext = line[start:end if end >= 0 else len(line)]
+    out = []
+    prev = 0
+    for m in re.finditer(r"%[\w.\-]+", argtext):
+        seg = argtext[prev:m.start()]
+        prev = m.end()
+        if _SHAPE_RE.search(seg):
+            out.append((m.group(0), seg))
+        else:
+            out.append((m.group(0), shapes.get(m.group(0), "")))
+    return out
 
 
 def _shape_dims(text: str):
@@ -286,10 +308,9 @@ def analyze_module(hlo_text: str) -> ModuleStats:
             # ---- dots ----
             if op == "dot":
                 lc = _LHS_CONTRACT_RE.search(line)
-                args_m = re.search(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
-                if lc is not None and args_m:
-                    lhs_shape = shapes.get(args_m.group(1), "")
-                    lhs_dims_all = _shape_dims(lhs_shape)
+                args = _arg_shapes(line, "dot", shapes)
+                if lc is not None and args:
+                    lhs_dims_all = _shape_dims(args[0][1])
                     out_dims = _shape_dims(shape_s)
                     if lhs_dims_all and out_dims:
                         lhs_dims = lhs_dims_all[0][1]
@@ -307,8 +328,8 @@ def analyze_module(hlo_text: str) -> ModuleStats:
                 out_dims = _shape_dims(shape_s)
                 wm_ = _WINDOW_RE.search(line)
                 fgc = _FGC_RE.search(line)
-                args_m = re.search(r"convolution\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
-                if out_dims and args_m:
+                conv_args = _arg_shapes(line, "convolution", shapes)
+                if out_dims and len(conv_args) >= 2:
                     out_n = 1
                     for d in out_dims[0][1]:
                         out_n *= d
@@ -316,7 +337,7 @@ def analyze_module(hlo_text: str) -> ModuleStats:
                     if wm_:
                         for d in wm_.group(1).split("x"):
                             spatial *= int(d)
-                    rhs = _shape_dims(shapes.get(args_m.group(2), ""))
+                    rhs = _shape_dims(conv_args[1][1])
                     cin_per_group = 1
                     if rhs:
                         # kernel layout has In/Out channel dims; approximate
@@ -350,8 +371,8 @@ def analyze_module(hlo_text: str) -> ModuleStats:
 
             # ---- CPU bf16->f32 upcasts (don't exist on the TPU target) ----
             if op == "convert" and "f32[" in shape_s:
-                am_ = re.search(r"convert\((%[\w.\-]+)", line)
-                src = shapes.get(am_.group(1), "") if am_ else ""
+                cargs = _arg_shapes(line, "convert", shapes)
+                src = cargs[0][1] if cargs else ""
                 if "bf16[" in src:
                     stats.upcast_bytes += w * (out_bytes + out_bytes // 2)
                     if out_bytes >= 1 << 30:
@@ -374,32 +395,28 @@ def analyze_module(hlo_text: str) -> ModuleStats:
                 stats.hbm_bytes += w * 2 * out_bytes
                 stats.hbm_bytes_tpu += w * 2 * _tpu_bytes(shape_s)
             elif op == "dynamic-update-slice":
-                am = re.search(
-                    r"dynamic-update-slice\((%[\w.\-]+),\s*(%[\w.\-]+)", line)
-                upd_s = shapes.get(am.group(2), "") if am else ""
+                dargs = _arg_shapes(line, "dynamic-update-slice", shapes)
+                upd_s = dargs[1][1] if len(dargs) >= 2 else ""
                 stats.hbm_bytes += w * 2 * _shape_bytes(upd_s)
                 stats.hbm_bytes_tpu += w * 2 * _tpu_bytes(upd_s)
             else:
                 operand_bytes = 0
-                am = _OPERANDS_RE.search(line[line.find(op + "("):])
-                if am:
-                    refs = [r.strip() for r in am.group("args").split(",")]
-                    eff = None
-                    if op == "fusion":
-                        cm2 = _CALLS_RE.search(line)
-                        if cm2:
-                            eff = fusion_param_reads.get(cm2.group(1))
-                    tpu_operand_bytes = 0
-                    for idx, ref in enumerate(refs):
-                        rs = shapes.get(ref, "")
-                        full = _shape_bytes(rs)
-                        tb = _tpu_bytes(rs)
-                        if eff is not None and idx in eff:
-                            operand_bytes += min(full, eff[idx])
-                            tpu_operand_bytes += min(tb, eff[idx])
-                        else:
-                            operand_bytes += full
-                            tpu_operand_bytes += tb
+                tpu_operand_bytes = 0
+                eff = None
+                if op == "fusion":
+                    cm2 = _CALLS_RE.search(line)
+                    if cm2:
+                        eff = fusion_param_reads.get(cm2.group(1))
+                for idx, (ref, rs) in enumerate(_arg_shapes(line, op,
+                                                            shapes)):
+                    full = _shape_bytes(rs)
+                    tb = _tpu_bytes(rs)
+                    if eff is not None and idx in eff:
+                        operand_bytes += min(full, eff[idx])
+                        tpu_operand_bytes += min(tb, eff[idx])
+                    else:
+                        operand_bytes += full
+                        tpu_operand_bytes += tb
                 stats.hbm_bytes += w * (out_bytes + operand_bytes)
                 stats.hbm_bytes_tpu += w * (_tpu_bytes(shape_s)
                                             + tpu_operand_bytes)

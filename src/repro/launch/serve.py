@@ -1,54 +1,153 @@
-"""Serving driver: edge router over serving replicas with batched requests.
+"""Serving driver: open-loop Poisson load over the async serving plane.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 12
+Unlike the old submit-all-then-drain pattern, requests arrive on a Poisson
+process (exponential inter-arrival gaps) while the replica decode loops run
+on background threads — the arrival rate does not adapt to the system, so
+queueing and latency under load are actually measured.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 24 \
+        --rate 4.0
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import List, Optional
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, reduced as reduce_cfg
-from repro.models.model import build_model
-from repro.serving.engine import EdgeRouter, ServingEngine
+from repro.core.monitoring import Monitor
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.replica import ReplicaSet
+
+
+def make_prompts(n: int, vocab_size: int, rng, lo: int = 4, hi: int = 17):
+    return [rng.integers(1, vocab_size, size=int(rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+def poisson_load(submit, prompts: List[np.ndarray], rate_rps: float, rng,
+                 max_new_tokens: int = 12) -> List[Request]:
+    """Open-loop generator: submit each prompt at its Poisson arrival time
+    regardless of how the system is keeping up. Returns the Requests."""
+    gaps = rng.exponential(1.0 / rate_rps, size=len(prompts)) \
+        if rate_rps > 0 else np.zeros(len(prompts))
+    t0 = time.perf_counter()
+    arrivals = np.cumsum(gaps)
+    out: List[Request] = []
+    for prompt, at in zip(prompts, arrivals):
+        delay = t0 + at - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        out.append(submit(prompt, max_new_tokens=max_new_tokens))
+    return out
+
+
+def _percentile(vals: List[float], q: float) -> Optional[float]:
+    if not vals:
+        return None
+    vals = sorted(vals)
+    return vals[min(len(vals) - 1, int(q * len(vals)))]
+
+
+def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
+                 baseline: Optional[dict] = None) -> dict:
+    """The serving benchmark contract: tok/s, TTFT p50, latency p95.
+    ``baseline`` is a totals snapshot taken before the measured window
+    (warmup / earlier traffic), subtracted so the engine counters describe
+    only this load wave."""
+    done = [r for r in reqs if r.done_t is not None]
+    toks = sum(len(r.generated) for r in done)
+    ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+    lats = [r.latency_s for r in done if r.latency_s is not None]
+    m = rs.metrics()
+    base = baseline or {}
+
+    def counter(k):
+        return m["total"].get(k, 0) - base.get(k, 0)
+
+    return {
+        "requests": len(reqs),
+        "completed": len(done),
+        "tokens": toks,
+        "wall_s": wall_s,
+        "tok_per_s": toks / wall_s if wall_s > 0 else 0.0,
+        "ttft_p50_s": _percentile(ttfts, 0.50),
+        "ttft_p95_s": _percentile(ttfts, 0.95),
+        "latency_p50_s": _percentile(lats, 0.50),
+        "latency_p95_s": _percentile(lats, 0.95),
+        "replicas": m["replicas"],
+        "failovers": m["failovers"],
+        "prefills": counter("prefills"),
+        "prefill_requests": counter("prefill_requests"),
+        "decode_steps": counter("decode_steps"),
+    }
+
+
+def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
+             max_new_tokens: int, rng, warmup: bool = True,
+             timeout_s: float = 300.0) -> dict:
+    """Drive a started ReplicaSet with Poisson arrivals and report."""
+    if warmup and prompts:
+        # one throwaway request per distinct admission shape compiles the
+        # prefill/decode kernels outside the measured window
+        w = rs.submit_request(prompts[0], max_new_tokens=2)
+        w.future.result(timeout=timeout_s)
+    baseline = dict(rs.metrics()["total"])   # exclude warmup/prior traffic
+    t0 = time.perf_counter()
+    reqs = poisson_load(rs.submit_request, prompts, rate_rps, rng,
+                        max_new_tokens)
+    for r in reqs:
+        r.future.result(timeout=timeout_s)
+    wall = time.perf_counter() - t0
+    return serve_report(reqs, wall, rs, baseline)
+
+
+def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
+                     monitor=None) -> ReplicaSet:
+    import jax
+    from repro.configs import get_config, reduced as reduce_cfg
+    from repro.models.model import build_model
+
+    cfg = reduce_cfg(get_config(arch))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    def factory(i: int) -> ServingEngine:
+        return ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                             name=f"replica{i}", monitor=monitor)
+
+    return ReplicaSet(factory, replicas=replicas, monitor=monitor)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="open-loop Poisson arrival rate (req/s)")
     args = ap.parse_args(argv)
 
-    cfg = reduce_cfg(get_config(args.arch))
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    engines = [ServingEngine(model, params, slots=args.slots,
-                             max_seq=args.max_seq, name=f"replica{i}")
-               for i in range(args.replicas)]
-    router = EdgeRouter(engines)
-
+    monitor = Monitor()
+    rs = build_replicaset(args.arch, replicas=args.replicas,
+                          slots=args.slots, max_seq=args.max_seq,
+                          monitor=monitor)
+    vocab = rs.engines[0].cfg.vocab_size      # the (reduced) serving config
+    rs.start()
     rng = np.random.default_rng(0)
-    t0 = time.time()
-    futures = []
-    for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size,
-                              size=int(rng.integers(4, 17)))
-        futures.append(router.submit(prompt, max_new_tokens=args.max_new))
-    router.drain()
-    outs = [f.result() for f in futures]
-    dt = time.time() - t0
-    total = sum(len(o) for o in outs)
-    print(f"{args.requests} requests over {args.replicas} replicas: "
-          f"{total} tokens in {dt:.2f}s ({total/dt:,.1f} tok/s)")
-    for name, m in router.metrics().items():
-        print(f"  {name}: {m}")
-    return outs
+    prompts = make_prompts(args.requests, vocab, rng)
+    try:
+        report = run_load(rs, prompts, rate_rps=args.rate,
+                          max_new_tokens=args.max_new, rng=rng)
+    finally:
+        rs.stop()
+    print(json.dumps(report, indent=2))
+    return report
 
 
 if __name__ == "__main__":

@@ -75,6 +75,28 @@ def program(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
+@jax.custom_vjp
+def _diff_barrier(h):
+    """``optimization_barrier`` with a differentiation rule: the installed JAX
+    has no AD rule for the primitive, so the train path (19 seed failures)
+    could not backprop through the scan body. The barrier is kept in both the
+    forward and transposed loops — its whole point is stopping XLA from
+    hoisting the f32 convert of the saved-h stack out of the (transposed)
+    loop — and the vjp makes it transparent to AD."""
+    return jax.lax.optimization_barrier(h)
+
+
+def _diff_barrier_fwd(h):
+    return jax.lax.optimization_barrier(h), None
+
+
+def _diff_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
 def sub_init(key, cfg: ModelConfig, sub: Sub, dtype, h_pad=None):
     k1, k2, k3 = jax.random.split(key, 3)
     attn_p, attn_ax = L.attn_init(k1, cfg, dtype, h_pad=h_pad)
@@ -341,7 +363,7 @@ def _build_transformer(cfg, mesh, parallel, policy=None):
             h, aux = carry
             # barrier: stops XLA from hoisting convert(saved-h-stack) to f32
             # out of the transposed loop (a 2x residual-memory artifact)
-            h = jax.lax.optimization_barrier(h)
+            h = _diff_barrier(h)
             block_ps = xs[:len(subs)]
             cache_slices = xs[len(subs):] if mode != "train" and caches else \
                 [None] * len(subs)

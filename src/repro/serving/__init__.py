@@ -1,0 +1,8 @@
+"""Async serving plane: engines, lifecycle-managed replicas, autoscaling."""
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serving.engine import (EdgeRouter, Request, ServingEngine,
+                                  greedy_generate)
+from repro.serving.replica import ReplicaSet
+
+__all__ = ["Autoscaler", "AutoscalerConfig", "EdgeRouter", "Request",
+           "ReplicaSet", "ServingEngine", "greedy_generate"]

@@ -1,0 +1,136 @@
+"""Load-driven autoscaling: replicas within a VRE, mesh resize beyond it.
+
+Paper mapping: on-demand elasticity (§3.1.2) — a VRE procures what it needs
+when it needs it. The ``Autoscaler`` closes the loop between the monitoring
+plane (rolling-window gauges: queue depth, p95 latency) and the two
+elasticity levers the platform has:
+
+  1. within the VRE   — ``ReplicaSet.scale_to`` (more/fewer serving replicas)
+  2. beyond the VRE   — ``resize_mesh`` callback (``elastic.resize`` onto a
+                        larger device mesh) once the replica pool is at max
+                        and still saturated.
+
+``evaluate()`` is a pure decision step (tests drive it synchronously);
+``run()`` wraps it in a background control loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 4
+    # avg outstanding requests per replica that triggers growth / shrink
+    scale_up_load: float = 3.0
+    scale_down_load: float = 0.5
+    # optional latency SLO: p95 above this also triggers growth
+    latency_p95_slo_s: Optional[float] = None
+    # only latency samples from this trailing window count toward the SLO
+    # (an all-time p95 would keep a long-idle system "hot" forever)
+    latency_window_s: float = 10.0
+    cooldown_s: float = 0.0
+    interval_s: float = 0.1
+
+
+class Autoscaler:
+    def __init__(self, replicaset, monitor, cfg: AutoscalerConfig,
+                 resize_mesh: Optional[Callable[[], None]] = None):
+        self.rs = replicaset
+        self.monitor = monitor
+        self.cfg = cfg
+        self.resize_mesh = resize_mesh
+        # bounded: a long-lived control loop appends one entry per tick
+        self.decisions = deque(maxlen=1024)
+        self._resize_requested = False
+        self._last_action_t = -float("inf")
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- signals -----------------------------------------------------------
+    def observe(self) -> dict:
+        """Publish the current load picture into the monitoring plane and
+        return it. Queue-depth gauges come from the engines themselves; p95
+        latency comes from the rolling window."""
+        n = max(1, self.rs.size)
+        load_per_replica = self.rs.load / n
+        self.monitor.gauge(self.rs.name, "load_per_replica",
+                           load_per_replica)
+        self.monitor.gauge(self.rs.name, "replicas", n)
+        lat = {}
+        for e in list(self.rs.engines):
+            s = self.monitor.gauge_stats(e.name, "latency_s",
+                                         window_s=self.cfg.latency_window_s)
+            if s["n"]:
+                lat[e.name] = s
+        p95 = max((s["p95"] for s in lat.values()), default=None)
+        return {"load_per_replica": load_per_replica, "replicas": n,
+                "latency_p95_s": p95}
+
+    # -- decision ----------------------------------------------------------
+    def evaluate(self) -> str:
+        """One control step: returns "up" | "down" | "resize" | "hold"."""
+        sig = self.observe()
+        now = time.monotonic()
+        if now - self._last_action_t < self.cfg.cooldown_s:
+            return self._record("hold", sig)
+        n = sig["replicas"]
+        hot = sig["load_per_replica"] > self.cfg.scale_up_load
+        slo = self.cfg.latency_p95_slo_s
+        if slo is not None and sig["latency_p95_s"] is not None:
+            hot = hot or sig["latency_p95_s"] > slo
+        if hot:
+            if n < self.cfg.max_replicas:
+                self.rs.scale_to(n + 1)
+                self._last_action_t = now
+                return self._record("up", sig)
+            if self.resize_mesh is not None and not self._resize_requested:
+                # fire once per saturation episode — the resize is applied
+                # by the driver at a safe point, so re-firing every tick
+                # until then would only spam the event log
+                self.resize_mesh()
+                self._resize_requested = True
+                self._last_action_t = now
+                return self._record("resize", sig)
+            return self._record("hold", sig)
+        self._resize_requested = False       # saturation episode over
+        if sig["load_per_replica"] < self.cfg.scale_down_load \
+                and n > self.cfg.min_replicas:
+            self.rs.scale_to(n - 1)
+            self._last_action_t = now
+            return self._record("down", sig)
+        return self._record("hold", sig)
+
+    def _record(self, action: str, sig: dict) -> str:
+        self.decisions.append(action)
+        if action != "hold":
+            self.monitor.log(self.rs.name, f"autoscale.{action}", **{
+                k: v for k, v in sig.items() if v is not None})
+        return action
+
+    # -- control loop ------------------------------------------------------
+    def run(self):
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.rs.name}-autoscaler",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self):
+        while not self._stop.wait(self.cfg.interval_s):
+            self.evaluate()
+
+    def stop(self, timeout: float = 5.0):
+        self._stop.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+        self._thread = None

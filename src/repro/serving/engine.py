@@ -6,11 +6,17 @@ data-parallel ``ServingEngine`` replicas, each of which runs a slotted
 continuous-batching decode loop (new requests join between decode steps,
 finished ones free their slot — the serving analogue of short-lived
 containerized tools).
+
+The engine is asynchronous by design: ``start()`` launches the decode loop on
+a background thread that admits waiting requests via a single *padded batched
+prefill* (one ``prefill`` call for every newly admitted slot instead of one
+batch-1 call per request), and ``stop()`` signals it through a real
+``threading.Event``. The synchronous ``run_until_idle`` path is kept for
+deterministic single-threaded use (tests, oracles).
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import queue
 import threading
 import time
@@ -30,60 +36,182 @@ class Request:
     future: Future = dataclasses.field(default_factory=Future)
     slot: int = -1
     generated: list = dataclasses.field(default_factory=list)
-    submit_t: float = dataclasses.field(default_factory=time.time)
+    submit_t: float = dataclasses.field(default_factory=time.perf_counter)
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.done_t is None:
+            return None
+        return self.done_t - self.submit_t
+
+    retries: int = 0
+
+    def reset_for_retry(self):
+        """Failover: forget partial progress; greedy decode is deterministic,
+        so a fresh run on another replica produces the same tokens."""
+        self.slot = -1
+        self.generated = []
+        self.first_token_t = None
+        self.retries += 1
+
+
+def _padding_safe(model, max_seq: int) -> bool:
+    """Right-padded batched prefill is exact only when every sub-layer is
+    global attention at this ``max_seq``: decode overwrites cache position
+    ``pos`` before attending, so pad garbage beyond the prompt is never read.
+    Rolling (sliding-window) caches place the *last W of the padded length*
+    — pad rows would evict real prompt positions — recurrent SSM state
+    absorbs pad tokens, and MoE capacity routing is shared across all
+    flattened batch tokens (pad rows would consume expert capacity and shift
+    real tokens' routing); all of those need exact per-length groups with no
+    pad rows instead."""
+    subs = getattr(model, "subs", None)
+    if subs is None:
+        return False
+    if any(s.ffn == "moe" for s in subs):
+        return False
+    return all(s.window == 0 or s.window >= max_seq for s in subs)
 
 
 class ServingEngine:
     """Slotted continuous batching over a fixed decode batch."""
 
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
-                 name: str = "engine0"):
+                 name: str = "engine0", monitor=None, prefill_bucket: int = 16):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.name = name
+        self.monitor = monitor
+        self.prefill_bucket = max(1, prefill_bucket)
         self.cache, _ = model.init_cache(slots, max_seq)
         self.pos = np.zeros((slots,), np.int32) - 1    # -1: free slot
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.metrics = {"requests": 0, "tokens": 0, "prefills": 0,
-                        "decode_steps": 0}
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode(p, c, t, pos))
-        self._stop = False
+                        "prefill_requests": 0, "decode_steps": 0,
+                        "completed": 0}
+        # jitted prefill/decode are shared across all engines with the same
+        # (model, slots, max_seq): replicas and failover respawns then reuse
+        # one compile instead of paying it per replica. Prefill is jitted
+        # with the padded (slots, bucketed_len) shape so repeat admissions
+        # hit the compile cache instead of re-tracing.
+        jit_cache = getattr(model, "_engine_jit_cache", None)
+        if jit_cache is None:
+            jit_cache = {}
+            model._engine_jit_cache = jit_cache
+        key = (slots, max_seq)
+        if key not in jit_cache:
+            jit_cache[key] = (
+                jax.jit(lambda p, c, t, pos: model.decode(p, c, t, pos)),
+                jax.jit(lambda p, t: model.prefill(p, t, max_seq)[1]))
+        self._decode, self._prefill = jit_cache[key]
+        self._pad_ok = _padding_safe(model, max_seq)
+        # -- async decode loop state --------------------------------------
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._killed = False
+        self.heartbeat = time.monotonic()
 
     # -- request API ------------------------------------------------------
-    def submit(self, tokens, max_new_tokens=16, eos_id=-1) -> Future:
-        r = Request(np.asarray(tokens, np.int32), max_new_tokens, eos_id)
+    def submit_request(self, tokens, max_new_tokens=16, eos_id=-1) -> Request:
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1 or not len(tokens):
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {tokens.shape}")
+        if len(tokens) + 1 > self.max_seq:
+            raise ValueError(f"prompt of {len(tokens)} tokens leaves no room "
+                             f"to generate within max_seq={self.max_seq}")
+        r = Request(tokens, max_new_tokens, eos_id)
         self.queue.put(r)
         self.metrics["requests"] += 1
-        return r.future
+        self._wake.set()
+        return r
 
-    # -- batching loop ----------------------------------------------------
+    def submit(self, tokens, max_new_tokens=16, eos_id=-1) -> Future:
+        return self.submit_request(tokens, max_new_tokens, eos_id).future
+
+    # -- batched admission -------------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        b = self.prefill_bucket
+        return min(self.max_seq, ((n + b - 1) // b) * b)
+
+    def _prefill_group(self, grp: List[Request]):
+        """One prefill call for a group of newly admitted requests. When
+        padding is safe, the batch dim is padded to ``slots`` and the length
+        to a bucket multiple, so the jitted prefill compiles once per bucket,
+        not once per request. Rolling/SSM/MoE groups are same-length and must
+        stay exact — with no pad rows — since length padding would wrap the
+        rolling cache (evicting real prompt positions) or feed pad tokens
+        into recurrent state, and pad rows would consume MoE expert
+        capacity."""
+        maxlen = max(len(r.tokens) for r in grp)
+        rows = self.slots if self._pad_ok else len(grp)
+        if self._pad_ok:
+            maxlen = self._bucket_len(maxlen)
+        toks = np.zeros((rows, maxlen), np.int32)
+        for j, r in enumerate(grp):
+            toks[j, :len(r.tokens)] = r.tokens
+        grp_cache = self._prefill(self.params, jnp.asarray(toks))
+        slots_arr = jnp.asarray([r.slot for r in grp], jnp.int32)
+        rows = jnp.arange(len(grp))
+        self.cache = jax.tree.map(
+            lambda full, new: full.at[:, slots_arr].set(new[:, rows]),
+            self.cache, grp_cache)
+        self.metrics["prefills"] += 1
+        self.metrics["prefill_requests"] += len(grp)
+        for r in grp:
+            self.pos[r.slot] = len(r.tokens) - 1
+            self.active[r.slot] = r
+
     def _admit(self):
-        """Fill free slots: run a batch-1 prefill for the request's prompt
-        and scatter its cache row into this engine's slot (every cache leaf
-        has batch at axis 1: (layers, B, ...))."""
+        """Fill free slots from the queue with a single padded batched
+        prefill (per prompt-length group when padding is unsafe)."""
+        batch: List[Request] = []
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
             try:
                 r = self.queue.get_nowait()
             except queue.Empty:
-                return
+                break
             r.slot = slot
-            _, one_cache = self.model.prefill(
-                self.params, jnp.asarray(r.tokens, jnp.int32)[None, :],
-                self.max_seq)
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
-                self.cache, one_cache)
-            self.pos[slot] = len(r.tokens) - 1
-            self.active[slot] = r
-            self.metrics["prefills"] += 1
+            batch.append(r)
+        if not batch:
+            return
+        if self._pad_ok:
+            groups = [batch]
+        else:                   # rolling/SSM/MoE: exact lengths, no pad rows
+            by_len = {}
+            for r in batch:
+                by_len.setdefault(len(r.tokens), []).append(r)
+            groups = list(by_len.values())
+        for grp in groups:
+            try:
+                self._prefill_group(grp)
+            except Exception as exc:
+                # fail just this group: the requests were already pulled off
+                # the queue, so an unhandled raise would strand them
+                for r in grp:
+                    r.slot = -1
+                    if not r.future.done():
+                        r.future.set_exception(exc)
+                if self.monitor is not None:
+                    self.monitor.log(self.name, "prefill_error",
+                                     error=repr(exc), requests=len(grp))
 
+    # -- decode step -------------------------------------------------------
     def step(self) -> int:
         """One fused decode step for all active slots. Returns #active."""
         self._admit()
@@ -102,21 +230,34 @@ class ServingEngine:
         next_tokens = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size],
                                             axis=-1))
         self.metrics["decode_steps"] += 1
+        now = time.perf_counter()
         for i in active:
             r = self.active[i]
             tok = int(next_tokens[i])
+            if not r.generated:
+                r.first_token_t = now
+                if self.monitor is not None:
+                    self.monitor.gauge(self.name, "ttft_s", r.ttft_s)
             r.generated.append(tok)
             self.metrics["tokens"] += 1
             self.pos[i] += 1
             done = (len(r.generated) >= r.max_new_tokens or tok == r.eos_id
                     or self.pos[i] + 1 >= self.max_seq)
             if done:
+                r.done_t = now
+                self.metrics["completed"] += 1
+                if self.monitor is not None:
+                    self.monitor.gauge(self.name, "latency_s", r.latency_s)
                 r.future.set_result(np.asarray(r.generated, np.int32))
                 self.active[i] = None
                 self.pos[i] = -1
+        if self.monitor is not None:
+            self.monitor.gauge(self.name, "queue_depth", self.load)
         return len(active)
 
+    # -- synchronous loop (tests / oracles) --------------------------------
     def run_until_idle(self, max_steps: int = 10_000):
+        assert not self.running, "run_until_idle on a started engine"
         steps = 0
         while (not self.queue.empty() or any(a is not None
                                              for a in self.active)):
@@ -126,32 +267,185 @@ class ServingEngine:
                 raise RuntimeError("serving loop did not drain")
         return steps
 
+    # -- async decode loop -------------------------------------------------
+    def start(self):
+        if self.running:
+            return self
+        self._stop.clear()
+        self._killed = False
+        self.heartbeat = time.monotonic()
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.name}-decode",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self):
+        while not self._stop.is_set():
+            if self._killed:        # simulated container crash: loop dies,
+                return              # heartbeat freezes, requests strand
+            self.heartbeat = time.monotonic()
+            try:
+                n = self.step()
+            except Exception as exc:
+                # a poisoned request must not kill the replica (a dead loop
+                # would re-queue it via failover and crash the next replica
+                # too): fail everything currently on this engine with the
+                # error and keep serving new work
+                self._fail_inflight(exc)
+                n = 0
+            # refresh after the step too: a single long step (first-call
+            # compile) must not read as a dead container to the health sweep
+            self.heartbeat = time.monotonic()
+            if n == 0:
+                self._wake.wait(timeout=0.005)
+                self._wake.clear()
+
+    def _fail_inflight(self, exc: Exception):
+        """Fail the requests in active slots (a decode error affects exactly
+        those); queued requests keep their chance — if the error is
+        systemic they fail one admission wave at a time, so the engine
+        still drains instead of looping."""
+        reqs = []
+        for i in range(self.slots):
+            if self.active[i] is not None:
+                reqs.append(self.active[i])
+            self.active[i] = None
+            self.pos[i] = -1
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(exc)
+        if self.monitor is not None:
+            self.monitor.log(self.name, "step_error", error=repr(exc),
+                             failed_requests=len(reqs))
+
+    def stop(self, timeout: float = 10.0) -> bool:
+        """Signal the decode loop and join it. Returns False if the thread
+        is still running after ``timeout`` (e.g. blocked in a long compile)
+        — the caller must NOT harvest until a later stop() succeeds."""
+        self._stop.set()
+        self._wake.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+            if t.is_alive():
+                return False
+        self._thread = None
+        return True
+
+    def kill(self):
+        """Simulate a container crash: the decode loop exits without
+        cleanup, health goes red, in-flight requests are stranded until a
+        ReplicaSet reschedules them."""
+        self._killed = True
+        self._wake.set()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def healthy(self) -> bool:
+        """True iff the engine can make progress on new work: not killed,
+        not stop()ped, and (if started) the decode loop is alive. A
+        never-started engine is healthy — the synchronous run_until_idle
+        path drives it without a thread."""
+        if self._killed or self._stop.is_set():
+            return False
+        if self._thread is not None:
+            return self._thread.is_alive()
+        return True
+
+    def wait_idle(self, timeout: float = 60.0) -> bool:
+        """Block until queue+slots are empty (async engines only)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.load == 0:
+                return True
+            if not self.running and not self._stop.is_set() \
+                    and self._thread is not None:
+                return False        # loop died with work pending
+            time.sleep(0.002)
+        return False
+
+    def harvest_requests(self) -> List[Request]:
+        """Strip all incomplete requests (queued + in-flight) off this
+        engine, resetting their progress so they can be rescheduled. Call
+        only after the decode loop has exited."""
+        assert not self.running, "harvest from a live decode loop"
+        out: List[Request] = []
+        while True:
+            try:
+                out.append(self.queue.get_nowait())
+            except queue.Empty:
+                break
+        for i in range(self.slots):
+            r = self.active[i]
+            if r is not None and not r.future.done():
+                out.append(r)
+            self.active[i] = None
+            self.pos[i] = -1
+        for r in out:
+            r.reset_for_retry()
+        return out
+
     @property
     def load(self) -> int:
         return self.queue.qsize() + sum(a is not None for a in self.active)
 
 
 class EdgeRouter:
-    """Traefik analogue: least-loaded dispatch over engine replicas."""
+    """Traefik analogue: least-loaded dispatch over healthy engine replicas.
 
-    def __init__(self, engines: List[ServingEngine]):
-        assert engines
-        self.engines = engines
-        self._rr = itertools.cycle(range(len(engines)))
+    Accepts either a plain engine list or a lifecycle-managed
+    ``repro.serving.replica.ReplicaSet`` (duck-typed via ``.engines``)."""
+
+    def __init__(self, engines):
+        self._source = engines if hasattr(engines, "engines") else None
+        self._engines = [] if self._source else list(engines)
+        assert self._engines or self._source
+
+    @property
+    def engines(self) -> List[ServingEngine]:
+        # always re-read from the ReplicaSet: scale_to/failover rebind its
+        # list, so a stored alias would go stale
+        return self._source.engines if self._source else self._engines
+
+    def _pool(self) -> List[ServingEngine]:
+        healthy = [e for e in self.engines if e.healthy()]
+        if not healthy:
+            raise RuntimeError("no healthy serving replicas")
+        return healthy
+
+    def submit_request(self, tokens, **kw) -> Request:
+        if self._source is not None:
+            # the ReplicaSet must choose-and-enqueue under its own lock so
+            # the request can't land on an engine after its final harvest
+            return self._source.submit_request(tokens, **kw)
+        eng = min(self._pool(), key=lambda e: e.load)
+        return eng.submit_request(tokens, **kw)
 
     def submit(self, tokens, **kw) -> Future:
-        eng = min(self.engines, key=lambda e: e.load)
-        return eng.submit(tokens, **kw)
+        return self.submit_request(tokens, **kw).future
 
-    def drain(self):
-        for e in self.engines:
-            e.run_until_idle()
+    def drain(self, timeout: float = 120.0):
+        if self._source is not None:
+            # ReplicaSet: failover may move work between engines mid-drain,
+            # so wait on the aggregate instead of per-engine queues
+            if not self._source.wait_all(timeout):
+                raise RuntimeError("replica set did not drain")
+            return
+        for e in self.engines:      # every engine — a dead one must not be
+            if e.running:           # silently skipped with queued requests
+                if not e.wait_idle(timeout):
+                    raise RuntimeError(f"{e.name} did not drain")
+            elif e.healthy():
+                e.run_until_idle()
+            elif e.load:
+                raise RuntimeError(f"{e.name} is dead with {e.load} "
+                                   f"undrained requests")
 
     def metrics(self):
-        out = {}
-        for e in self.engines:
-            out[e.name] = dict(e.metrics)
-        return out
+        return {e.name: dict(e.metrics) for e in self.engines}
 
 
 def greedy_generate(model, params, prompt: np.ndarray, max_new_tokens: int,

@@ -1,0 +1,238 @@
+"""Lifecycle-managed serving replicas with health-based rescheduling.
+
+Paper mapping (§3.1.2): the orchestrator keeps a declared number of service
+replicas alive, watches container health, and reschedules work off failed
+containers. ``ReplicaSet`` does exactly that for ``ServingEngine`` replicas:
+each engine runs its decode loop on a background thread and publishes a
+heartbeat; a monitor thread detects dead/stale replicas, strips their
+incomplete requests, re-queues them onto healthy replicas, and (optionally)
+spawns a replacement — greedy decode is deterministic, so rescheduled
+requests produce identical tokens.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+from repro.serving.engine import Request, ServingEngine
+
+
+class ReplicaSet:
+    """A self-healing, scalable pool of ServingEngine replicas."""
+
+    def __init__(self, factory: Callable[[int], ServingEngine],
+                 replicas: int = 2, *, name: str = "lm-server",
+                 monitor=None, heartbeat_timeout: float = 30.0,
+                 check_interval: float = 0.05, respawn: bool = False):
+        assert replicas >= 1
+        self.factory = factory
+        self.name = name
+        self.monitor = monitor
+        self.heartbeat_timeout = heartbeat_timeout
+        self.check_interval = check_interval
+        self.respawn = respawn
+        self._lock = threading.RLock()
+        self.engines: List[ServingEngine] = [factory(i)
+                                             for i in range(replicas)]
+        self._next_id = replicas
+        self._failovers = 0
+        self._retired_metrics: dict = {}   # name -> final counters of
+                                           # replicas removed from the pool
+        self._health_stop = threading.Event()
+        self._health_thread: Optional[threading.Thread] = None
+        self._started = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self):
+        with self._lock:
+            if self._started:
+                return self
+            self._started = True
+            for e in self.engines:
+                e.start()
+        self._health_stop.clear()
+        self._health_thread = threading.Thread(
+            target=self._health_loop, name=f"{self.name}-health", daemon=True)
+        self._health_thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0):
+        self._health_stop.set()
+        t = self._health_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+        self._health_thread = None
+        with self._lock:
+            engines = list(self.engines)
+            self._started = False
+        for e in engines:
+            stopped = e.stop(timeout)
+            # a stopped pool runs no decode loops: fail still-pending
+            # futures instead of leaving their waiters blocked forever
+            if stopped:
+                for r in e.harvest_requests():
+                    if not r.future.done():
+                        r.future.set_exception(
+                            RuntimeError(f"{self.name} stopped with the "
+                                         f"request still pending"))
+
+    # -- dispatch ----------------------------------------------------------
+    def healthy_engines(self) -> List[ServingEngine]:
+        with self._lock:
+            return [e for e in self.engines if e.healthy()]
+
+    def submit_request(self, tokens, **kw) -> Request:
+        # choose AND enqueue under the lock: failover harvests a dead
+        # engine's queue under the same lock, so a request can never land on
+        # an engine after its final harvest (it would be lost forever)
+        with self._lock:
+            pool = [e for e in self.engines if e.healthy()]
+            if not pool:
+                raise RuntimeError(f"{self.name}: no healthy replicas")
+            eng = min(pool, key=lambda e: e.load)
+            return eng.submit_request(tokens, **kw)
+
+    def submit(self, tokens, **kw):
+        return self.submit_request(tokens, **kw).future
+
+    # -- health / rescheduling --------------------------------------------
+    def _health_loop(self):
+        while not self._health_stop.wait(self.check_interval):
+            try:
+                self.check_once()
+            except Exception as exc:     # the sweep must outlive any replica
+                if self.monitor is not None:
+                    self.monitor.log(self.name, "health_sweep_error",
+                                     error=repr(exc))
+
+    def check_once(self) -> int:
+        """One health sweep; returns the number of failovers performed."""
+        now = time.monotonic()
+        dead = []
+        with self._lock:
+            if not self._started:
+                return 0
+            for e in self.engines:
+                stale = self._started and e.load > 0 and \
+                    (now - e.heartbeat) > self.heartbeat_timeout
+                if not e.healthy() or (not e.running and e.load > 0) or stale:
+                    dead.append(e)
+        n = 0
+        for e in dead:
+            self.failover(e)
+            n += 1
+        return n
+
+    def failover(self, engine: ServingEngine, max_retries: int = 3):
+        """Reschedule everything off a failed replica (paper: container
+        rescheduling). The dead engine is removed from the pool; its
+        incomplete requests restart from the prompt on healthy replicas."""
+        if not engine.stop():
+            return          # decode thread still running (e.g. mid-compile):
+                            # harvesting now would race it; retry next sweep
+        with self._lock:
+            if engine not in self.engines:
+                return
+            self.engines.remove(engine)
+            self._retired_metrics[engine.name] = dict(engine.metrics)
+            self._failovers += 1
+            if self.respawn or not self.engines:
+                fresh = self.factory(self._next_id)
+                self._next_id += 1
+                if self._started:
+                    fresh.start()
+                self.engines.append(fresh)
+            requeued = engine.harvest_requests()
+        kept = []
+        for r in requeued:
+            if r.retries > max_retries:     # poisoned request: stop bouncing
+                r.future.set_exception(RuntimeError(
+                    f"request failed over {r.retries} times"))
+            else:
+                kept.append(r)
+        self._requeue(kept, "failover")
+        if self.monitor is not None:
+            self.monitor.log(self.name, "failover", replica=engine.name,
+                             requeued=len(requeued))
+
+    def _requeue(self, requests, why: str):
+        for r in requests:
+            with self._lock:
+                pool = [e for e in self.engines if e.healthy()]
+                if not pool:
+                    r.future.set_exception(RuntimeError(
+                        f"no healthy replicas for {why}"))
+                    continue
+                eng = min(pool, key=lambda e: e.load)
+                eng.queue.put(r)
+                eng.metrics["requests"] += 1
+                eng._wake.set()
+
+    # -- elasticity --------------------------------------------------------
+    def scale_to(self, n: int) -> int:
+        """Grow/shrink the pool to ``n`` replicas. Shrinking picks the
+        least-loaded replicas, drains their work back onto the pool."""
+        assert n >= 1
+        removed: List[ServingEngine] = []
+        added = 0
+        with self._lock:
+            while len(self.engines) < n:
+                e = self.factory(self._next_id)
+                self._next_id += 1
+                if self._started:
+                    e.start()
+                self.engines.append(e)
+                added += 1
+            if len(self.engines) > n:
+                by_load = sorted(self.engines, key=lambda e: e.load)
+                removed = by_load[:len(self.engines) - n]
+                self.engines = [e for e in self.engines
+                                if e not in removed]
+        for e in removed:
+            # harvest only once the loop has exited; on a stop timeout
+            # (e.g. a long first-call compile) put the engine back in the
+            # pool — its _stop flag is set, so the health sweep will retry
+            # the removal via failover instead of stranding its requests
+            if e.stop(timeout=60.0):
+                with self._lock:
+                    self._retired_metrics[e.name] = dict(e.metrics)
+                self._requeue(e.harvest_requests(), "scale-down")
+            else:
+                with self._lock:
+                    self.engines.append(e)
+        if self.monitor is not None and (removed or added):
+            self.monitor.log(self.name, "scaled", replicas=len(self.engines))
+        return len(self.engines)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def load(self) -> int:
+        with self._lock:
+            return sum(e.load for e in self.engines)
+
+    @property
+    def size(self) -> int:
+        with self._lock:
+            return len(self.engines)
+
+    def wait_all(self, timeout: float = 120.0) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.load == 0:
+                return True
+            time.sleep(0.005)
+        return False
+
+    def metrics(self) -> dict:
+        with self._lock:
+            per = {e.name: dict(e.metrics) for e in self.engines}
+            retired = {n: dict(m) for n, m in self._retired_metrics.items()}
+        agg = {}
+        # totals include retired replicas' final counters — work done before
+        # a failover must not vanish from the aggregate
+        for m in list(per.values()) + list(retired.values()):
+            for k, v in m.items():
+                agg[k] = agg.get(k, 0) + v
+        return {"replicas": len(per), "failovers": self._failovers,
+                "per_replica": per, "retired": retired, "total": agg}

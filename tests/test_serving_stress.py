@@ -1,0 +1,48 @@
+"""Slow e2e stress: open-loop Poisson load with the autoscaler closing the
+loop on real engines. Run with ``pytest -m slow``."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.monitoring import Monitor
+from repro.launch.serve import make_prompts, run_load
+from repro.models.model import build_model
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.replica import ReplicaSet
+
+pytestmark = pytest.mark.slow
+
+
+def test_autoscaled_poisson_load_end_to_end():
+    cfg = reduced(get_config("yi-9b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    mon = Monitor()
+
+    def factory(i):
+        return ServingEngine(model, params, slots=2, max_seq=96,
+                             name=f"r{i}", monitor=mon)
+
+    rs = ReplicaSet(factory, replicas=1, monitor=mon)
+    scaler = Autoscaler(rs, mon, AutoscalerConfig(
+        min_replicas=1, max_replicas=3, scale_up_load=1.5,
+        scale_down_load=0.25, interval_s=0.02))
+    rs.start()
+    scaler.run()
+    rng = np.random.default_rng(0)
+    prompts = make_prompts(24, cfg.vocab_size, rng, lo=4, hi=12)
+    try:
+        # near-burst arrivals: even with warm compile caches the queue must
+        # pile up on the single starting replica and force a scale-up
+        report = run_load(rs, prompts, rate_rps=500.0, max_new_tokens=16,
+                          rng=rng)
+    finally:
+        scaler.stop()
+        rs.stop()
+    assert report["completed"] == report["requests"] == 24
+    assert "up" in scaler.decisions          # load forced a scale-up
+    assert report["tok_per_s"] > 0
+    assert report["ttft_p50_s"] is not None
+    assert report["latency_p95_s"] is not None

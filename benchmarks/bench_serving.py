@@ -2,10 +2,22 @@
 plane (batched prefill, background decode loops). Reports the serving
 contract — ``tok_per_s``, ``ttft_p50_s``, ``latency_p95_s`` — plus prefill
 batching efficiency and a kill-one-replica failover scenario that must still
-complete 100% of requests."""
+complete 100% of requests.
+
+``--elastic`` adds the end-to-end mesh-resize scenario: a VRE serving plane
+saturates, the pending resize is applied between load waves (drain ->
+re-instantiate on the grown mesh -> re-place replicas on disjoint slices ->
+adopt carried requests), and the report includes resize downtime plus tok/s
+before/after. Needs >= 2 host devices; when the current process has only
+one, the scenario re-execs itself in a subprocess with
+``--xla_force_host_platform_device_count``."""
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -63,17 +75,97 @@ def _failover(fast: bool) -> dict:
     return rep
 
 
-def main(fast: bool = False):
+def _elastic(fast: bool) -> dict:
+    """VRE serving plane driven through two load waves with a mesh resize
+    applied at the inter-wave safe point. 100% of submitted requests must
+    complete; the report carries resize downtime and before/after tok/s."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        if os.environ.get("REPRO_ELASTIC_CHILD"):
+            raise RuntimeError(
+                "forced host-device count did not take effect (backend "
+                f"{jax.default_backend()!r} has {len(jax.devices())} "
+                "device); refusing to re-exec again")
+        return _elastic_subprocess(fast)
+
+    import repro.core.services  # noqa: F401  (registers builtin packages)
+    from repro.core.vre import VREConfig, VirtualResearchEnvironment
+    from repro.launch.serve import run_elastic_serve
+
+    n_req = 8 if fast else 16
+    cfg = VREConfig(
+        name="bench-elastic", mesh_shape=(1, 1),
+        services=["lm-server"], arch="yi-9b",
+        workdir=tempfile.mkdtemp(prefix="bench_elastic_"),
+        extra={"replicas": 2, "slots": 3, "max_seq": 96, "autoscale": True,
+               "min_replicas": 1, "max_replicas": 2})
+    vre = VirtualResearchEnvironment(cfg)
+    vre.instantiate()
+    try:
+        rep = run_elastic_serve(
+            vre, waves=2, requests_per_wave=n_req, rate_rps=50.0,
+            max_new_tokens=8, rng=np.random.default_rng(0),
+            force_resize=True)
+    finally:
+        vre.destroy()
+    assert rep["resizes"], "elastic scenario performed no resize"
+    ev = rep["resizes"][0]
+    return {
+        "requests": rep["requests"],
+        "completed": rep["completed"],
+        "completion_rate": rep["completion_rate"],
+        "old_shape": ev["old_shape"],
+        "new_shape": ev["new_shape"],
+        "resize_downtime_s": ev["downtime_s"],
+        "tok_per_s_before": ev["tok_per_s_before"],
+        "tok_per_s_after": ev["tok_per_s_after"],
+        "placements_after": rep["waves"][-1]["placements"],
+    }
+
+
+def _elastic_subprocess(fast: bool, n_devices: int = 4) -> dict:
+    """Re-exec the elastic scenario with forced host devices (the parent
+    process already initialized its backend with a single device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["JAX_PLATFORMS"] = "cpu"      # host-device forcing is CPU-only
+    env["REPRO_ELASTIC_CHILD"] = "1"  # recursion guard
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    args = [sys.executable, os.path.abspath(__file__), "--elastic-only"]
+    if fast:
+        args.append("--fast")
+    r = subprocess.run(args, capture_output=True, text=True, env=env,
+                       timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"elastic subprocess failed:\n{r.stdout[-2000:]}"
+                           f"\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout)
+
+
+def main(fast: bool = False, elastic: bool = False):
     tp = _throughput(fast)
     fo = _failover(fast)
-    return {
+    out = {
         **tp,
         "failover": {"requests": fo["requests"],
                      "completed": fo["completed"],
                      "failovers": fo["failovers"],
                      "all_completed": fo["all_completed"]},
     }
+    if elastic:
+        out["elastic"] = _elastic(fast)
+    return out
 
 
 if __name__ == "__main__":
-    print(json.dumps(main(), indent=2))
+    if "--elastic-only" in sys.argv:
+        # subprocess entry: emit exactly the elastic-scenario JSON on stdout
+        print(json.dumps(_elastic("--fast" in sys.argv), indent=2))
+    else:
+        print(json.dumps(main(fast="--fast" in sys.argv,
+                              elastic="--elastic" in sys.argv), indent=2))

@@ -94,23 +94,36 @@ def cmd_status(args):
 
 def cmd_serve(args):
     """Instantiate the VRE's serving plane and drive it with an open-loop
-    Poisson load; prints the serving-contract report JSON."""
+    Poisson load; prints the serving-contract report JSON.
+
+    With ``--waves N`` (N > 1) the load arrives in waves and any
+    autoscaler-requested mesh resize is applied between waves — the elastic
+    end-to-end path: drain, re-instantiate on the grown mesh, re-place
+    replicas on disjoint slices, resume."""
     import numpy as np
-    from repro.launch.serve import make_prompts, run_load
+    from repro.launch.serve import make_prompts, run_elastic_serve, run_load
 
     d = Path(args.dir)
     vre, _ = _load_vre(d)
     if "lm-server" not in vre.config.services:
         vre.config.services.append("lm-server")
+    if args.autoscale:
+        vre.config.extra["autoscale"] = True
     vre.instantiate()
     try:
-        server = vre.service("lm-server")
-        rs = server.replicaset
         rng = np.random.default_rng(args.seed)
-        prompts = make_prompts(args.requests,
-                               rs.engines[0].cfg.vocab_size, rng)
-        report = run_load(rs, prompts, rate_rps=args.rate,
-                          max_new_tokens=args.max_new, rng=rng)
+        if args.waves > 1:
+            report = run_elastic_serve(
+                vre, waves=args.waves, requests_per_wave=args.requests,
+                rate_rps=args.rate, max_new_tokens=args.max_new, rng=rng,
+                force_resize=args.force_resize)
+        else:
+            server = vre.service("lm-server")
+            rs = server.replicaset
+            prompts = make_prompts(args.requests,
+                                   rs.engines[0].cfg.vocab_size, rng)
+            report = run_load(rs, prompts, rate_rps=args.rate,
+                              max_new_tokens=args.max_new, rng=rng)
         print(json.dumps(report, indent=2))
     finally:
         vre.destroy()
@@ -147,6 +160,15 @@ def main(argv=None):
     p.add_argument("--rate", type=float, default=4.0)
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--waves", type=int, default=1,
+                   help="load waves; >1 applies pending mesh resizes "
+                        "between waves (elastic serving)")
+    p.add_argument("--autoscale", action="store_true",
+                   help="run the load-driven autoscaler (replica scaling + "
+                        "mesh-resize requests at saturation)")
+    p.add_argument("--force-resize", action="store_true",
+                   help="request a mesh resize before the inter-wave safe "
+                        "point even if the autoscaler didn't")
     p.set_defaults(fn=cmd_serve)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)

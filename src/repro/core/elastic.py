@@ -3,12 +3,19 @@ volume (checkpoint) service. On-demand VREs procure what they need, when
 they need it (the paper's core thesis) — growing from 1 pod to 2 mid-run is
 just: checkpoint -> destroy -> instantiate(new mesh) -> restore with the new
 shardings (the deployment image cache makes the re-instantiation cheap).
+
+``resize_serving`` is the serving-plane entry point: it applies a pending
+resize *without losing in-flight requests* — incomplete requests are
+detached from the old replica pool before the destroy and adopted by the
+successor pool on the grown mesh, so their futures resolve transparently
+across the resize (greedy decode is deterministic, so the tokens are
+identical to a no-resize run).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -22,11 +29,14 @@ class ResizeReport:
 
 
 def resize_if_requested(vre, state: Any = None,
-                        reshard: Optional[Callable] = None):
+                        reshard: Optional[Callable] = None
+                        ) -> Tuple[Optional[ResizeReport], Any]:
     """Apply an autoscaler-requested mesh resize at a safe point. The
     serving autoscaler records saturation via ``vre.request_resize`` (resize
     is destructive: checkpoint -> destroy -> re-instantiate), and the driver
-    calls this between load waves. No-op when nothing is pending."""
+    calls this between load waves. Returns ``(report, restored_state)``;
+    when nothing is pending it is a no-op returning ``(None, state)`` so
+    callers can unpack uniformly."""
     if vre.pending_resize is None:
         return None, state
     return vre.resize(vre.pending_resize, state=state,
@@ -34,11 +44,13 @@ def resize_if_requested(vre, state: Any = None,
 
 
 def resize(vre, new_mesh_shape: tuple, state: Any = None,
-           reshard: Optional[Callable] = None) -> ResizeReport:
+           reshard: Optional[Callable] = None
+           ) -> Tuple[ResizeReport, Any]:
     """reshard(state_like, new_mesh) -> restored state with new shardings.
 
     When ``state``/``reshard`` are given, state round-trips through the
-    VRE's checkpoint store; otherwise only the services move.
+    VRE's checkpoint store; otherwise only the services move. Returns
+    ``(ResizeReport, restored_state_or_None)``.
     """
     old_shape = vre.config.mesh_shape
     store = None
@@ -71,3 +83,69 @@ def resize(vre, new_mesh_shape: tuple, state: Any = None,
                         reinstantiate_s=t2 - t1,
                         restore_s=t3 - t2,
                         deployment=report.to_json()), restored
+
+
+def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
+    """Apply a pending mesh resize under a live serving plane.
+
+    Sequence: stop the old autoscaler, detach every incomplete request off
+    the old replica pool (futures stay attached to their waiters), run the
+    destructive resize (destroy -> re-instantiate on the grown mesh; the
+    rebuilt ``lm-server`` partitions the new mesh into per-replica slices),
+    then have the successor pool adopt the carried requests.
+
+    No-op (returns None) when nothing is pending. A pending shape the
+    provider cannot satisfy is cleared and logged rather than raised — the
+    autoscaler may re-request once more capacity exists.
+    """
+    import numpy as np
+
+    import jax
+
+    if vre.pending_resize is None:
+        return None
+    need = int(np.prod(vre.pending_resize))
+    if len(jax.devices()) < need:
+        vre.monitor.log("vre", "resize_infeasible",
+                        want=need, have=len(jax.devices()),
+                        shape=list(vre.pending_resize))
+        vre.pending_resize = None
+        if service in vre.services:
+            # re-arm the autoscaler: still-saturated load may request again
+            # (e.g. once the provider gains capacity)
+            scaler = getattr(vre.service(service), "autoscaler", None)
+            if scaler is not None:
+                scaler.notify_resized()
+        return None
+
+    t0 = time.perf_counter()
+    carried = []
+    if service in vre.services:
+        handle = vre.service(service)
+        scaler = getattr(handle, "autoscaler", None)
+        if scaler is not None:
+            scaler.stop()
+        rs = getattr(handle, "replicaset", None)
+        if rs is not None:
+            carried = rs.detach_requests()
+    try:
+        report, _ = resize_if_requested(vre)
+        new_rs = getattr(vre.service(service), "replicaset", None) \
+            if service in vre.services else None
+        if new_rs is not None and carried:
+            new_rs.adopt(carried)
+    except BaseException as exc:
+        # the re-instantiation failed with the requests already detached:
+        # fail their futures rather than leave waiters blocked forever
+        for r in carried:
+            if not r.future.done():
+                r.future.set_exception(RuntimeError(
+                    f"mesh resize failed with the request detached: "
+                    f"{exc!r}"))
+        raise
+    downtime = time.perf_counter() - t0
+    vre.monitor.log("vre", "resize_applied",
+                    old=list(report.old_shape), new=list(report.new_shape),
+                    carried_requests=len(carried), downtime_s=downtime)
+    return {"report": report, "downtime_s": downtime,
+            "carried_requests": len(carried)}

@@ -54,6 +54,14 @@ class ServiceHandle:
             return inner(n)
         return 1
 
+    def rebalance(self, mesh) -> dict:
+        """Re-place the service onto a (resized) device mesh. Services with
+        no placement state report an empty dict."""
+        inner = getattr(self.instance, "rebalance", None)
+        if callable(inner):
+            return inner(mesh)
+        return {}
+
     def metrics(self) -> dict:
         inner = getattr(self.instance, "metrics", None)
         if callable(inner):

@@ -131,6 +131,9 @@ class ServingService(ServiceHandle):
     def scale(self, n: int) -> int:
         return self.replicaset.scale_to(n)
 
+    def rebalance(self, mesh) -> dict:
+        return self.replicaset.rebalance(mesh)
+
     def metrics(self) -> dict:
         return self.replicaset.metrics()
 
@@ -149,11 +152,16 @@ def build_server(ctx):
     slots = int(ctx.config.extra.get("slots", 2))
     max_seq = int(ctx.config.extra.get("max_seq", 128))
 
-    def factory(i: int) -> ServingEngine:
+    def factory(i: int, devices=None) -> ServingEngine:
         return ServingEngine(model, params, slots=slots, max_seq=max_seq,
-                             name=f"replica{i}", monitor=ctx.monitor)
+                             name=f"replica{i}", monitor=ctx.monitor,
+                             devices=devices)
 
-    rs = ReplicaSet(factory, replicas=replicas, monitor=ctx.monitor)
+    # the ReplicaSet partitions the VRE mesh into disjoint per-replica
+    # slices, so "scale the mesh" genuinely changes the hardware replicas
+    # occupy (not just thread counts)
+    rs = ReplicaSet(factory, replicas=replicas, monitor=ctx.monitor,
+                    mesh=ctx.mesh)
     router = EdgeRouter(rs)
     autoscaler = None
     if ctx.config.extra.get("autoscale"):

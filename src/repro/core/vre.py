@@ -155,6 +155,8 @@ class VirtualResearchEnvironment:
             "state": self.state,
             "mesh": list(self.config.mesh_shape) if self.mesh is not None
                     else None,
+            "pending_resize": list(self.pending_resize)
+                              if self.pending_resize else None,
             "services": {n: {"kind": s.kind, "endpoint": s.endpoint,
                              "healthy": s.health()}
                          for n, s in self.services.items()},
@@ -203,7 +205,8 @@ class VirtualResearchEnvironment:
     def resize(self, new_mesh_shape: tuple, state: Any = None,
                state_reshard: Optional[object] = None):
         """Re-instantiate on a different mesh; optionally reshard ``state``
-        through the volume service (see repro.core.elastic)."""
+        through the volume service (see repro.core.elastic). Returns
+        ``(ResizeReport, restored_state_or_None)``."""
         from repro.core import elastic
         out = elastic.resize(self, new_mesh_shape, state=state,
                              reshard=state_reshard)

@@ -105,7 +105,7 @@ def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
 
 
 def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
-                     monitor=None) -> ReplicaSet:
+                     monitor=None, mesh=None) -> ReplicaSet:
     import jax
     from repro.configs import get_config, reduced as reduce_cfg
     from repro.models.model import build_model
@@ -114,11 +114,79 @@ def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
 
-    def factory(i: int) -> ServingEngine:
+    def factory(i: int, devices=None) -> ServingEngine:
         return ServingEngine(model, params, slots=slots, max_seq=max_seq,
-                             name=f"replica{i}", monitor=monitor)
+                             name=f"replica{i}", monitor=monitor,
+                             devices=devices)
 
-    return ReplicaSet(factory, replicas=replicas, monitor=monitor)
+    return ReplicaSet(factory, replicas=replicas, monitor=monitor, mesh=mesh)
+
+
+def run_elastic_serve(vre, *, waves: int = 2, requests_per_wave: int = 16,
+                      rate_rps: float = 20.0, max_new_tokens: int = 8,
+                      rng=None, timeout_s: float = 300.0,
+                      force_resize: bool = False) -> dict:
+    """Drive a VRE's serving plane through ``waves`` Poisson load waves,
+    applying any autoscaler-requested mesh resize between waves (the safe
+    point): ``elastic.resize_serving`` drains the pool, re-instantiates on
+    the grown mesh, re-places replicas on disjoint slices, and the successor
+    pool adopts the carried requests. Reports per-wave serving contracts and
+    resize events (downtime, tok/s before/after).
+
+    ``force_resize`` requests a default (data-axis doubling) resize before
+    the inter-wave safe point when the autoscaler hasn't — benchmarks use it
+    to make the elastic scenario deterministic."""
+    from repro.core import elastic
+
+    rng = rng if rng is not None else np.random.default_rng(0)
+    server = vre.service("lm-server")
+    rs = server.replicaset
+    vocab = rs.engines[0].cfg.vocab_size
+    wave_reports, resize_events = [], []
+    total_reqs = total_done = 0
+    for w in range(waves):
+        prompts = make_prompts(requests_per_wave, vocab, rng)
+        rep = run_load(rs, prompts, rate_rps=rate_rps,
+                       max_new_tokens=max_new_tokens, rng=rng,
+                       timeout_s=timeout_s)
+        rep["wave"] = w
+        rep["mesh"] = list(vre.config.mesh_shape)
+        rep["placements"] = {n: [str(d) for d in devs]
+                             for n, devs in rs.placements().items()}
+        wave_reports.append(rep)
+        total_reqs += rep["requests"]
+        total_done += rep["completed"]
+        if w == waves - 1:
+            break
+        if force_resize and vre.pending_resize is None:
+            vre.request_resize()
+        ev = elastic.resize_serving(vre)
+        if ev is not None:
+            server = vre.service("lm-server")     # rebuilt on the new mesh
+            rs = server.replicaset
+            if server.autoscaler is not None:
+                server.autoscaler.notify_resized()
+            r = ev["report"]
+            resize_events.append({
+                "after_wave": w,
+                "old_shape": list(r.old_shape),
+                "new_shape": list(r.new_shape),
+                "downtime_s": ev["downtime_s"],
+                "reinstantiate_s": r.reinstantiate_s,
+                "carried_requests": ev["carried_requests"],
+            })
+    for ev in resize_events:
+        w = ev["after_wave"]
+        ev["tok_per_s_before"] = wave_reports[w]["tok_per_s"]
+        ev["tok_per_s_after"] = wave_reports[w + 1]["tok_per_s"]
+    return {
+        "waves": wave_reports,
+        "resizes": resize_events,
+        "requests": total_reqs,
+        "completed": total_done,
+        "completion_rate": total_done / total_reqs if total_reqs else 1.0,
+        "final_mesh": list(vre.config.mesh_shape),
+    }
 
 
 def main(argv=None):

@@ -106,6 +106,17 @@ class Autoscaler:
             return self._record("down", sig)
         return self._record("hold", sig)
 
+    def notify_resized(self):
+        """Driver hook: the pending mesh resize was applied, so the next
+        saturation episode may request another one."""
+        self._resize_requested = False
+
+    @property
+    def scale_events(self) -> int:
+        """Number of non-hold decisions taken — soak tests bound this to
+        prove the controller doesn't thrash."""
+        return sum(1 for d in self.decisions if d != "hold")
+
     def _record(self, action: str, sig: dict) -> str:
         self.decisions.append(action)
         if action != "hold":

@@ -82,10 +82,17 @@ def _padding_safe(model, max_seq: int) -> bool:
 
 
 class ServingEngine:
-    """Slotted continuous batching over a fixed decode batch."""
+    """Slotted continuous batching over a fixed decode batch.
+
+    ``devices`` assigns this replica a slice of the VRE mesh: params and the
+    KV cache are ``jax.device_put`` onto it (replicated across the slice when
+    it holds more than one device), so replicas genuinely occupy disjoint
+    hardware instead of all sharing the default device. With ``devices=None``
+    the engine keeps the old uncommitted default-device behavior."""
 
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
-                 name: str = "engine0", monitor=None, prefill_bucket: int = 16):
+                 name: str = "engine0", monitor=None, prefill_bucket: int = 16,
+                 devices=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -95,6 +102,19 @@ class ServingEngine:
         self.monitor = monitor
         self.prefill_bucket = max(1, prefill_bucket)
         self.cache, _ = model.init_cache(slots, max_seq)
+        self.devices = tuple(devices) if devices else ()
+        if self.devices:
+            if len(self.devices) == 1:
+                target = self.devices[0]
+            else:
+                from jax.sharding import (Mesh, NamedSharding,
+                                          PartitionSpec)
+                slice_mesh = Mesh(np.array(self.devices), ("slice",))
+                target = NamedSharding(slice_mesh, PartitionSpec())
+            # committed inputs pin every jitted prefill/decode call (and its
+            # outputs) to this replica's slice
+            self.params = jax.device_put(params, target)
+            self.cache = jax.device_put(self.cache, target)
         self.pos = np.zeros((slots,), np.int32) - 1    # -1: free slot
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: "queue.Queue[Request]" = queue.Queue()
@@ -248,7 +268,9 @@ class ServingEngine:
                 self.metrics["completed"] += 1
                 if self.monitor is not None:
                     self.monitor.gauge(self.name, "latency_s", r.latency_s)
-                r.future.set_result(np.asarray(r.generated, np.int32))
+                if not r.future.done():     # a detach may have failed the
+                    r.future.set_result(    # future out from under a stuck
+                        np.asarray(r.generated, np.int32))   # decode loop
                 self.active[i] = None
                 self.pos[i] = -1
         if self.monitor is not None:
@@ -391,6 +413,14 @@ class ServingEngine:
     @property
     def load(self) -> int:
         return self.queue.qsize() + sum(a is not None for a in self.active)
+
+    @property
+    def device_set(self) -> frozenset:
+        """Devices this replica's params actually live on — placement truth
+        (read from the arrays), not just the requested slice."""
+        if not self.devices:
+            return frozenset()
+        return frozenset(jax.tree.leaves(self.params)[0].devices())
 
 
 class EdgeRouter:

@@ -11,20 +11,48 @@ requests produce identical tokens.
 """
 from __future__ import annotations
 
+import inspect
+import queue as queue_mod
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 from repro.serving.engine import Request, ServingEngine
 
 
-class ReplicaSet:
-    """A self-healing, scalable pool of ServingEngine replicas."""
+def partition_devices(devices: Sequence, n: int) -> List[tuple]:
+    """Split a device list into ``n`` per-replica slices. When the pool has
+    at least ``n`` devices the slices are disjoint contiguous blocks (the
+    remainder devices go to the first slices); when replicas oversubscribe
+    the pool, devices are reused round-robin."""
+    devices = list(devices)
+    d = len(devices)
+    if d == 0:
+        return [tuple()] * n
+    if n <= d:
+        base, rem = divmod(d, n)
+        out, i = [], 0
+        for j in range(n):
+            k = base + (1 if j < rem else 0)
+            out.append(tuple(devices[i:i + k]))
+            i += k
+        return out
+    return [(devices[j % d],) for j in range(n)]
 
-    def __init__(self, factory: Callable[[int], ServingEngine],
+
+class ReplicaSet:
+    """A self-healing, scalable pool of ServingEngine replicas.
+
+    With a ``mesh`` (or explicit ``devices``), the pool partitions the device
+    set into per-replica slices and passes each slice to the factory, so
+    replicas occupy disjoint hardware; ``rebalance`` re-partitions onto a new
+    (grown) mesh — drain, re-slice, re-place, resume."""
+
+    def __init__(self, factory: Callable[..., ServingEngine],
                  replicas: int = 2, *, name: str = "lm-server",
                  monitor=None, heartbeat_timeout: float = 30.0,
-                 check_interval: float = 0.05, respawn: bool = False):
+                 check_interval: float = 0.05, respawn: bool = False,
+                 mesh=None, devices: Optional[Sequence] = None):
         assert replicas >= 1
         self.factory = factory
         self.name = name
@@ -32,16 +60,57 @@ class ReplicaSet:
         self.heartbeat_timeout = heartbeat_timeout
         self.check_interval = check_interval
         self.respawn = respawn
+        self.mesh = mesh
+        if devices is not None:
+            self._device_pool = list(devices)
+        elif mesh is not None:
+            self._device_pool = list(mesh.devices.flat)
+        else:
+            self._device_pool = []
+        try:        # legacy single-arg factories (tests, stubs) keep working
+            sig = inspect.signature(factory)
+            self._factory_takes_devices = len(sig.parameters) >= 2
+        except (TypeError, ValueError):
+            self._factory_takes_devices = False
         self._lock = threading.RLock()
-        self.engines: List[ServingEngine] = [factory(i)
-                                             for i in range(replicas)]
+        slices = partition_devices(self._device_pool, replicas)
+        self.engines: List[ServingEngine] = [
+            self._spawn(i, slices[i]) for i in range(replicas)]
         self._next_id = replicas
         self._failovers = 0
+        self._rebalances = 0
+        self._rebalancing = False
         self._retired_metrics: dict = {}   # name -> final counters of
                                            # replicas removed from the pool
         self._health_stop = threading.Event()
         self._health_thread: Optional[threading.Thread] = None
         self._started = False
+
+    # -- placement ---------------------------------------------------------
+    def _spawn(self, i: int, devices: Optional[tuple]) -> ServingEngine:
+        if devices and self._factory_takes_devices:
+            return self.factory(i, devices)
+        return self.factory(i)
+
+    def _next_devices(self) -> Optional[tuple]:
+        """Slice for an incrementally added replica (scale-up / respawn):
+        the pool device with the fewest replicas already assigned to it —
+        keeps growth disjoint while slots remain, then shares fairly."""
+        if not self._device_pool:
+            return None
+        counts = {d: 0 for d in self._device_pool}
+        with self._lock:
+            for e in self.engines:
+                for d in getattr(e, "devices", ()):
+                    if d in counts:
+                        counts[d] += 1
+        return (min(self._device_pool, key=lambda d: counts[d]),)
+
+    def placements(self) -> dict:
+        """name -> tuple of devices each replica occupies."""
+        with self._lock:
+            return {e.name: tuple(getattr(e, "devices", ()))
+                    for e in self.engines}
 
     # -- lifecycle ---------------------------------------------------------
     def start(self):
@@ -76,6 +145,20 @@ class ReplicaSet:
                         r.future.set_exception(
                             RuntimeError(f"{self.name} stopped with the "
                                          f"request still pending"))
+            else:
+                # decode thread stuck (e.g. a long compile): active slots
+                # may still complete, but queued requests never will — the
+                # queue is thread-safe, so fail those now rather than leave
+                # their waiters blocked forever
+                while True:
+                    try:
+                        r = e.queue.get_nowait()
+                    except queue_mod.Empty:
+                        break
+                    if not r.future.done():
+                        r.future.set_exception(
+                            RuntimeError(f"{self.name} stopped with the "
+                                         f"request still queued"))
 
     # -- dispatch ----------------------------------------------------------
     def healthy_engines(self) -> List[ServingEngine]:
@@ -111,7 +194,7 @@ class ReplicaSet:
         now = time.monotonic()
         dead = []
         with self._lock:
-            if not self._started:
+            if not self._started or self._rebalancing:
                 return 0
             for e in self.engines:
                 stale = self._started and e.load > 0 and \
@@ -138,7 +221,7 @@ class ReplicaSet:
             self._retired_metrics[engine.name] = dict(engine.metrics)
             self._failovers += 1
             if self.respawn or not self.engines:
-                fresh = self.factory(self._next_id)
+                fresh = self._spawn(self._next_id, self._next_devices())
                 self._next_id += 1
                 if self._started:
                     fresh.start()
@@ -178,7 +261,7 @@ class ReplicaSet:
         added = 0
         with self._lock:
             while len(self.engines) < n:
-                e = self.factory(self._next_id)
+                e = self._spawn(self._next_id, self._next_devices())
                 self._next_id += 1
                 if self._started:
                     e.start()
@@ -204,6 +287,99 @@ class ReplicaSet:
         if self.monitor is not None and (removed or added):
             self.monitor.log(self.name, "scaled", replicas=len(self.engines))
         return len(self.engines)
+
+    def rebalance(self, mesh=None, *, replicas: Optional[int] = None,
+                  timeout: float = 60.0) -> dict:
+        """Re-place the whole pool onto (a possibly new) mesh: drain the
+        engines, harvest their incomplete requests, partition the device
+        pool into fresh per-replica slices, respawn, resume, and re-queue
+        the harvested work. Greedy decode is deterministic, so requests
+        carried across the rebalance produce identical tokens. Returns
+        ``{"downtime_s", "requeued", "replicas"}``."""
+        t0 = time.monotonic()
+        with self._lock:
+            self._rebalancing = True       # health sweep must not failover
+            if mesh is not None:           # engines we are mid-harvesting
+                self.mesh = mesh
+                self._device_pool = list(mesh.devices.flat)
+            n = replicas if replicas is not None else len(self.engines)
+            old = list(self.engines)
+        requeued: List[Request] = []
+        stuck: List[ServingEngine] = []
+        try:
+            for e in old:
+                if e.stop(timeout):
+                    requeued.extend(e.harvest_requests())
+                    with self._lock:
+                        self._retired_metrics[e.name] = dict(e.metrics)
+                else:
+                    # decode thread still running (e.g. mid-compile): keep
+                    # the engine in the pool; its _stop flag is set, so the
+                    # health sweep retires it via failover once it exits
+                    stuck.append(e)
+            with self._lock:
+                slices = partition_devices(self._device_pool, n)
+                fresh = []
+                for j in range(n):
+                    eng = self._spawn(self._next_id, slices[j])
+                    self._next_id += 1
+                    if self._started:
+                        eng.start()
+                    fresh.append(eng)
+                self.engines = fresh + stuck
+                self._rebalances += 1
+        finally:
+            with self._lock:
+                self._rebalancing = False
+        self._requeue(requeued, "rebalance")
+        downtime = time.monotonic() - t0
+        if self.monitor is not None:
+            self.monitor.log(self.name, "rebalanced", replicas=n,
+                             devices=len(self._device_pool),
+                             requeued=len(requeued), downtime_s=downtime)
+        return {"downtime_s": downtime, "requeued": len(requeued),
+                "replicas": n}
+
+    def detach_requests(self, timeout: float = 60.0) -> List[Request]:
+        """Stop the pool *without* failing pending futures and return every
+        incomplete request (elastic mesh resize: the successor pool adopts
+        them, so waiters span the resize transparently)."""
+        self._health_stop.set()
+        t = self._health_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+        self._health_thread = None
+        with self._lock:
+            engines = list(self.engines)
+            self._started = False
+        out: List[Request] = []
+        for e in engines:
+            if e.stop(timeout):
+                out.extend(e.harvest_requests())
+                continue
+            # decode thread stuck (e.g. mid-compile) and the engine is
+            # about to be discarded: the thread-safe queue can still be
+            # carried; active-slot requests can't be harvested safely, so
+            # fail their futures now (future.set_* is thread-safe, and the
+            # dying loop guards against already-done futures)
+            while True:
+                try:
+                    r = e.queue.get_nowait()
+                except queue_mod.Empty:
+                    break
+                r.reset_for_retry()
+                out.append(r)
+            for r in list(e.active):
+                if r is not None and not r.future.done():
+                    r.future.set_exception(RuntimeError(
+                        f"{e.name} unresponsive during detach with the "
+                        f"request in flight"))
+        return out
+
+    def adopt(self, requests: List[Request], why: str = "resize"):
+        """Accept requests harvested off a predecessor pool (their futures
+        stay attached, so original waiters see the results)."""
+        self._requeue(list(requests), why)
 
     # -- introspection -----------------------------------------------------
     @property
@@ -235,4 +411,5 @@ class ReplicaSet:
             for k, v in m.items():
                 agg[k] = agg.get(k, 0) + v
         return {"replicas": len(per), "failovers": self._failovers,
+                "rebalances": self._rebalances,
                 "per_replica": per, "retired": retired, "total": agg}

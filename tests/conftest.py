@@ -1,11 +1,28 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # NOTE: device count is NOT forced here — smoke tests see the 1 real CPU
 # device. Multi-device tests spawn subprocesses with their own XLA_FLAGS.
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
 
 import pytest  # noqa: E402
+
+
+def run_devices(code: str, n_devices: int = 8, timeout=600):
+    """Run a script in a subprocess with a forced host-device count (the
+    main test process keeps the single real device, per the dry-run-only
+    rule for device-count forcing)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout[-3000:] + "\n" + r.stderr[-5000:]
+    return r.stdout
 
 
 @pytest.fixture(scope="session")

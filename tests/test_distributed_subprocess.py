@@ -1,25 +1,9 @@
 """Multi-device tests: each runs a script in a subprocess with its own
 forced host-device count (the main test process keeps the single real
 device, per the dry-run-only rule for device-count forcing)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_devices(code: str, n_devices: int = 8, timeout=600):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, r.stdout[-2000:] + "\n" + r.stderr[-4000:]
-    return r.stdout
+from conftest import run_devices
 
 
 def test_moe_ep_matches_ref_on_mesh():

@@ -1,0 +1,122 @@
+"""Long-horizon serving soak (``pytest -m slow``): oscillating Poisson load
+through ``cli serve``-equivalent wiring (VRE + lm-server + autoscaler), with
+a failover storm and an applied elastic mesh resize. Runs in subprocesses
+with forced host-device counts so replica placement and the mesh resize are
+real."""
+import pytest
+
+from conftest import run_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_soak_oscillating_load_failover_storm():
+    """Oscillating waves: the autoscaler must scale up under load and back
+    down when idle without thrashing (bounded scale-event count), and 100%
+    of requests must complete across a storm that kills 2 replicas
+    mid-wave."""
+    out = run_devices("""
+        import tempfile, time
+        import numpy as np
+        import repro.core.services  # noqa: F401
+        from repro.core.vre import VREConfig, VirtualResearchEnvironment
+        from repro.launch.serve import make_prompts, poisson_load
+
+        cfg = VREConfig(
+            name="soak", mesh_shape=(2, 1), services=["lm-server"],
+            arch="yi-9b", workdir=tempfile.mkdtemp(),
+            extra={"replicas": 1, "slots": 2, "max_seq": 96,
+                   "autoscale": True, "min_replicas": 1, "max_replicas": 3})
+        vre = VirtualResearchEnvironment(cfg)
+        vre.instantiate()
+        server = vre.service("lm-server")
+        rs = server.replicaset
+        rs.check_interval = 0.02
+        scaler = server.autoscaler
+        scaler.cfg.interval_s = 0.02
+        scaler.cfg.scale_up_load = 1.5
+        scaler.cfg.scale_down_load = 0.25
+        scaler.cfg.cooldown_s = 0.3
+        vocab = rs.engines[0].cfg.vocab_size
+        rng = np.random.default_rng(0)
+        rs.submit_request(make_prompts(1, vocab, rng)[0],
+                          max_new_tokens=2).future.result(timeout=600)
+
+        all_reqs = []
+        waves = [(28, 400.0, False), (4, 2.0, False), (28, 400.0, True)]
+        for n, rate, storm in waves:
+            prompts = make_prompts(n, vocab, rng, lo=4, hi=12)
+            reqs = poisson_load(rs.submit_request, prompts, rate, rng,
+                                max_new_tokens=10)
+            if storm:
+                # wait for the autoscaler to grow the pool (force it if the
+                # wave drains too fast), then kill two replicas mid-wave —
+                # a healthy one must survive
+                deadline = time.monotonic() + 10
+                while rs.size < 3 and time.monotonic() < deadline:
+                    time.sleep(0.02)
+                if rs.size < 3:
+                    rs.scale_to(3)
+                for e in rs.engines[:2]:
+                    e.kill()
+            for r in reqs:
+                r.future.result(timeout=600)
+            all_reqs.extend(reqs)
+            time.sleep(1.2)          # idle gap: let the controller cool off
+
+        done = sum(1 for r in all_reqs if r.future.done()
+                   and r.future.exception() is None)
+        assert done == len(all_reqs) == 60, (done, len(all_reqs))
+        assert "up" in scaler.decisions, "load never forced a scale-up"
+        assert "down" in scaler.decisions, "idle never scaled back down"
+        # bounded scale-event count: cooldown caps the controller at ~3
+        # actions/s, and 3 waves + storm recovery legitimately need ~12;
+        # >22 over this horizon means up/down oscillation, i.e. thrash
+        assert scaler.scale_events <= 22, \\
+            f"autoscaler thrashing: {scaler.scale_events} scale events"
+        assert rs.metrics()["failovers"] >= 2, "storm killed < 2 replicas"
+        vre.destroy()
+        print("OK", done, scaler.scale_events)
+    """, n_devices=4, timeout=900)
+    assert "OK" in out
+
+
+def test_cli_serve_elastic_resize_end_to_end():
+    """``cli serve --waves 2`` under saturating load applies a real mesh
+    resize between waves: ResizeReport emitted, replicas re-placed on
+    disjoint slices of the grown mesh, 100% completion, measurable downtime
+    and before/after throughput."""
+    out = run_devices("""
+        import contextlib, io, itertools, json, tempfile
+        from pathlib import Path
+        from repro import cli
+
+        d = tempfile.mkdtemp()
+        cli.main(["init", "cpu", d])
+        p = Path(d) / "vre.json"
+        cfg = json.loads(p.read_text())
+        cfg["services"] = []            # just the serving plane
+        cfg["extra"] = {"replicas": 2, "slots": 2, "max_seq": 96,
+                        "min_replicas": 2, "max_replicas": 2}
+        p.write_text(json.dumps(cfg))
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            cli.main(["serve", "--dir", d, "--requests", "10", "--rate",
+                      "50", "--waves", "2", "--autoscale", "--force-resize"])
+        rep = json.loads(buf.getvalue())
+        assert rep["completed"] == rep["requests"] == 20
+        assert rep["completion_rate"] == 1.0
+        assert rep["resizes"], "no resize was applied"
+        ev = rep["resizes"][0]
+        assert ev["old_shape"] == [1, 1] and ev["new_shape"] == [2, 1]
+        assert ev["downtime_s"] > 0
+        assert ev["tok_per_s_before"] > 0 and ev["tok_per_s_after"] > 0
+        assert rep["final_mesh"] == [2, 1]
+        place = rep["waves"][-1]["placements"]
+        sets = [set(v) for v in place.values()]
+        assert len(sets) == 2 and all(sets)
+        for a, b in itertools.combinations(sets, 2):
+            assert a.isdisjoint(b), place
+        print("OK")
+    """, n_devices=4, timeout=900)
+    assert "OK" in out

@@ -103,12 +103,19 @@ def cmd_serve(args):
     import numpy as np
     from repro.launch.serve import make_prompts, run_elastic_serve, run_load
 
+    if args.prefix_cache_mb and not args.chunk_tokens:
+        sys.exit("serve: --prefix-cache-mb requires --chunk-tokens "
+                 "(prefix entries live at chunk boundaries)")
     d = Path(args.dir)
     vre, _ = _load_vre(d)
     if "lm-server" not in vre.config.services:
         vre.config.services.append("lm-server")
     if args.autoscale:
         vre.config.extra["autoscale"] = True
+    if args.chunk_tokens:
+        vre.config.extra["chunk_tokens"] = args.chunk_tokens
+    if args.prefix_cache_mb:
+        vre.config.extra["prefix_cache_mb"] = args.prefix_cache_mb
     vre.instantiate()
     try:
         rng = np.random.default_rng(args.seed)
@@ -169,6 +176,13 @@ def main(argv=None):
     p.add_argument("--force-resize", action="store_true",
                    help="request a mesh resize before the inter-wave safe "
                         "point even if the autoscaler didn't")
+    p.add_argument("--chunk-tokens", type=int, default=0,
+                   help="chunk-wise prefill in pieces of this many tokens "
+                        "(admits long prompts without stalling decode; "
+                        "0 disables)")
+    p.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                   help="cross-request prefix-cache LRU budget in MiB "
+                        "(requires --chunk-tokens; 0 disables)")
     p.set_defaults(fn=cmd_serve)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)

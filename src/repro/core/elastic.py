@@ -120,6 +120,7 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
 
     t0 = time.perf_counter()
     carried = []
+    old_prefix_cache = None
     if service in vre.services:
         handle = vre.service(service)
         scaler = getattr(handle, "autoscaler", None)
@@ -128,12 +129,18 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
         rs = getattr(handle, "replicaset", None)
         if rs is not None:
             carried = rs.detach_requests()
+            old_prefix_cache = getattr(rs, "prefix_cache", None)
     try:
         report, _ = resize_if_requested(vre)
         new_rs = getattr(vre.service(service), "replicaset", None) \
             if service in vre.services else None
         if new_rs is not None and carried:
             new_rs.adopt(carried)
+        if new_rs is not None and old_prefix_cache is not None:
+            # prefix-cache entries are host-side and device-agnostic: carry
+            # them so shared prompt heads stay warm across the resize (a
+            # successor with different chunking drops them coherently)
+            new_rs.adopt_prefix_cache(old_prefix_cache)
     except BaseException as exc:
         # the re-instantiation failed with the requests already detached:
         # fail their futures rather than leave waiters blocked forever

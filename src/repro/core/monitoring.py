@@ -78,6 +78,14 @@ class Monitor:
                 "p50": vals[n // 2], "p95": vals[min(n - 1,
                                                      int(0.95 * n))]}
 
+    def gauge_last(self, service: str, name: str):
+        """Newest sample of a gauge, or None if never recorded — the cheap
+        read path for monotonic gauges (prefix-cache hit/miss/eviction
+        totals) where the full window stats are overkill."""
+        with self._lock:
+            pts = self._gauges.get((service, name))
+            return pts[-1][1] if pts else None
+
     def gauges(self) -> dict:
         with self._lock:
             keys = list(self._gauges)

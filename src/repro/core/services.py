@@ -22,6 +22,7 @@ from repro.models.model import build_model
 from repro.optim.adamw import OptimizerConfig
 from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.engine import EdgeRouter, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.replica import ReplicaSet
 from repro.training.train_step import (TrainStepConfig, init_state,
                                        make_train_step)
@@ -151,24 +152,36 @@ def build_server(ctx):
     replicas = int(ctx.config.extra.get("replicas", 2))
     slots = int(ctx.config.extra.get("slots", 2))
     max_seq = int(ctx.config.extra.get("max_seq", 128))
+    chunk_tokens = int(ctx.config.extra.get("chunk_tokens", 0))
+    prefix_cache_mb = float(ctx.config.extra.get("prefix_cache_mb", 0))
+    prefix_cache = None
+    if chunk_tokens and prefix_cache_mb > 0:
+        prefix_cache = PrefixCache(chunk_tokens,
+                                   budget_bytes=int(prefix_cache_mb * 2**20),
+                                   monitor=ctx.monitor)
 
     def factory(i: int, devices=None) -> ServingEngine:
         return ServingEngine(model, params, slots=slots, max_seq=max_seq,
                              name=f"replica{i}", monitor=ctx.monitor,
-                             devices=devices)
+                             devices=devices, chunk_tokens=chunk_tokens,
+                             prefix_cache=prefix_cache)
 
     # the ReplicaSet partitions the VRE mesh into disjoint per-replica
     # slices, so "scale the mesh" genuinely changes the hardware replicas
     # occupy (not just thread counts)
     rs = ReplicaSet(factory, replicas=replicas, monitor=ctx.monitor,
-                    mesh=ctx.mesh)
+                    mesh=ctx.mesh, prefix_cache=prefix_cache)
     router = EdgeRouter(rs)
     autoscaler = None
     if ctx.config.extra.get("autoscale"):
         as_cfg = AutoscalerConfig(
             min_replicas=int(ctx.config.extra.get("min_replicas", 1)),
             max_replicas=int(ctx.config.extra.get("max_replicas",
-                                                  max(replicas, 4))))
+                                                  max(replicas, 4))),
+            scale_up_prefill_tokens=(
+                float(ctx.config.extra["scale_up_prefill_tokens"])
+                if ctx.config.extra.get("scale_up_prefill_tokens") is not None
+                else None))
         autoscaler = Autoscaler(rs, ctx.monitor, as_cfg,
                                 resize_mesh=getattr(ctx.vre, "request_resize",
                                                     None))

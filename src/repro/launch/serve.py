@@ -27,6 +27,16 @@ def make_prompts(n: int, vocab_size: int, rng, lo: int = 4, hi: int = 17):
             for _ in range(n)]
 
 
+def make_shared_prefix_prompts(n: int, vocab_size: int, rng, *,
+                               prefix_len: int = 48, lo: int = 4,
+                               hi: int = 13) -> List[np.ndarray]:
+    """The scientific-pipeline traffic shape: every request shares a long
+    system/context head and differs only in a short payload."""
+    head = rng.integers(1, vocab_size, size=prefix_len)
+    return [np.concatenate([head, rng.integers(
+        1, vocab_size, size=int(rng.integers(lo, hi)))]) for _ in range(n)]
+
+
 def poisson_load(submit, prompts: List[np.ndarray], rate_rps: float, rng,
                  max_new_tokens: int = 12) -> List[Request]:
     """Open-loop generator: submit each prompt at its Poisson arrival time
@@ -67,12 +77,17 @@ def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
     def counter(k):
         return m["total"].get(k, 0) - base.get(k, 0)
 
-    return {
+    prompt_toks = sum(len(r.tokens) for r in done)
+    out = {
         "requests": len(reqs),
         "completed": len(done),
         "tokens": toks,
+        "prompt_tokens": prompt_toks,
         "wall_s": wall_s,
         "tok_per_s": toks / wall_s if wall_s > 0 else 0.0,
+        # prefill throughput: prompt tokens turned into KV state per wall
+        # second — prefix-cache hits raise this without touching the model
+        "prefill_tok_per_s": prompt_toks / wall_s if wall_s > 0 else 0.0,
         "ttft_p50_s": _percentile(ttfts, 0.50),
         "ttft_p95_s": _percentile(ttfts, 0.95),
         "latency_p50_s": _percentile(lats, 0.50),
@@ -81,8 +96,14 @@ def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
         "failovers": m["failovers"],
         "prefills": counter("prefills"),
         "prefill_requests": counter("prefill_requests"),
+        "prefill_chunks": counter("prefill_chunks"),
+        "prefill_tokens": counter("prefill_tokens"),
+        "prefix_hit_tokens": counter("prefix_hit_tokens"),
         "decode_steps": counter("decode_steps"),
     }
+    if "prefix_cache" in m:
+        out["prefix_cache"] = m["prefix_cache"]
+    return out
 
 
 def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
@@ -94,6 +115,11 @@ def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
         # prefill/decode kernels outside the measured window
         w = rs.submit_request(prompts[0], max_new_tokens=2)
         w.future.result(timeout=timeout_s)
+        if getattr(rs, "prefix_cache", None) is not None:
+            # the first request seeded the prefix cache; a second identical
+            # one exercises the hit/restore path, compiling it too
+            w = rs.submit_request(prompts[0], max_new_tokens=2)
+            w.future.result(timeout=timeout_s)
     baseline = dict(rs.metrics()["total"])   # exclude warmup/prior traffic
     t0 = time.perf_counter()
     reqs = poisson_load(rs.submit_request, prompts, rate_rps, rng,
@@ -105,21 +131,30 @@ def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
 
 
 def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
-                     monitor=None, mesh=None) -> ReplicaSet:
+                     monitor=None, mesh=None, chunk_tokens: int = 0,
+                     prefix_cache_mb: float = 0.0) -> ReplicaSet:
     import jax
     from repro.configs import get_config, reduced as reduce_cfg
     from repro.models.model import build_model
+    from repro.serving.prefix_cache import PrefixCache
 
     cfg = reduce_cfg(get_config(arch))
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
+    prefix_cache = None
+    if chunk_tokens and prefix_cache_mb > 0:
+        prefix_cache = PrefixCache(chunk_tokens,
+                                   budget_bytes=int(prefix_cache_mb * 2**20),
+                                   monitor=monitor)
 
     def factory(i: int, devices=None) -> ServingEngine:
         return ServingEngine(model, params, slots=slots, max_seq=max_seq,
                              name=f"replica{i}", monitor=monitor,
-                             devices=devices)
+                             devices=devices, chunk_tokens=chunk_tokens,
+                             prefix_cache=prefix_cache)
 
-    return ReplicaSet(factory, replicas=replicas, monitor=monitor, mesh=mesh)
+    return ReplicaSet(factory, replicas=replicas, monitor=monitor, mesh=mesh,
+                      prefix_cache=prefix_cache)
 
 
 def run_elastic_serve(vre, *, waves: int = 2, requests_per_wave: int = 16,
@@ -199,16 +234,33 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunk-wise prefill in pieces of this many tokens "
+                         "(0 disables; required for prefix caching)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="cross-request prefix-cache LRU budget in MiB "
+                         "(0 disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prompts share a prefix head of this many tokens "
+                         "(0: independent prompts)")
     args = ap.parse_args(argv)
+    if args.prefix_cache_mb and not args.chunk_tokens:
+        ap.error("--prefix-cache-mb requires --chunk-tokens "
+                 "(prefix entries live at chunk boundaries)")
 
     monitor = Monitor()
     rs = build_replicaset(args.arch, replicas=args.replicas,
                           slots=args.slots, max_seq=args.max_seq,
-                          monitor=monitor)
+                          monitor=monitor, chunk_tokens=args.chunk_tokens,
+                          prefix_cache_mb=args.prefix_cache_mb)
     vocab = rs.engines[0].cfg.vocab_size      # the (reduced) serving config
     rs.start()
     rng = np.random.default_rng(0)
-    prompts = make_prompts(args.requests, vocab, rng)
+    if args.shared_prefix:
+        prompts = make_shared_prefix_prompts(args.requests, vocab, rng,
+                                             prefix_len=args.shared_prefix)
+    else:
+        prompts = make_prompts(args.requests, vocab, rng)
     try:
         report = run_load(rs, prompts, rate_rps=args.rate,
                           max_new_tokens=args.max_new, rng=rng)

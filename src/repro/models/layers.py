@@ -336,6 +336,27 @@ def attention(cfg, q, k, v, *, window: int = 0, block: int = 1024):
     return attention_naive(cfg, q, k, v, window=window)
 
 
+def chunk_attention(cfg, q, k_cache, v_cache, qpos):
+    """Chunked-prefill attention: a multi-token chunk attends over the full
+    per-slot cache. q: (B,C,H,hd); caches: (B,T,KV,hd) with the chunk's own
+    K/V already written at absolute positions ``qpos``; qpos: (B,C) int32.
+    Global attention only — the engine gates chunked prefill to padding-safe
+    (all-global) models, where masking ``kpos <= qpos`` is exact: positions
+    beyond the chunk are either unwritten scratch (masked) or later-prompt
+    positions not yet computed (masked)."""
+    b, c, h, hd = q.shape
+    skv, kvh = k_cache.shape[1], k_cache.shape[2]
+    qg = _group(q, kvh)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache).astype(jnp.float32)
+    s = softcap(s * _scale(cfg), cfg.attn_softcap)
+    kpos = jnp.arange(skv)
+    valid = kpos[None, None, :] <= qpos[:, :, None]          # (B,C,T)
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v_cache)
+    return out.reshape(b, c, h, hd)
+
+
 def decode_attention(cfg, q, k_cache, v_cache, pos, *, window: int = 0):
     """Single-token decode. q: (B,1,H,hd); caches: (B,S,KV,hd); pos: (B,) int32
     (position of the *current* token, already written into the cache)."""

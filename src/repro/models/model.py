@@ -193,6 +193,16 @@ def sub_apply(p, cfg: ModelConfig, sub: Sub, h, positions, mode: str,
         else:
             attn = L.decode_attention(cfg, q, kc, vc, pos, window=sub.window)
         new_cache = {"k": kc, "v": vc}
+    elif mode == "chunk":
+        # chunked prefill: write the chunk's K/V at its absolute positions
+        # into the full-length cache and attend over the cache (global
+        # attention only — the serving engine gates chunking on padding
+        # safety, so rolling/SSM/MoE sub-layers never see this mode)
+        b = h.shape[0]
+        kc = cache["k"].at[jnp.arange(b)[:, None], positions].set(k)
+        vc = cache["v"].at[jnp.arange(b)[:, None], positions].set(v)
+        attn = L.chunk_attention(cfg, q, kc, vc, positions)
+        new_cache = {"k": kc, "v": vc}
     else:
         if mode == "prefill":
             kc, vc = _build_prefill_cache(k, v, _cache_len(cfg, sub, max_seq))
@@ -416,6 +426,22 @@ def _build_transformer(cfg, mesh, parallel, policy=None):
         h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
         return _logits(params["embed"], cfg, h), list(new_caches)
 
+    def prefill_chunk(params, caches, inputs, pos0):
+        """Chunk-wise prefill: run ``inputs`` (B,C) — one chunk of a longer
+        prompt starting at absolute positions ``pos0`` (B,) — against the
+        full-length ``caches``, writing the chunk's K/V in place. Earlier
+        chunks (and any prefix-cache restore) must already occupy positions
+        [0, pos0). Exact only for all-global (padding-safe) models; the
+        serving engine gates on that."""
+        c = inputs.shape[1]
+        positions = pos0[:, None] + jnp.arange(c)[None, :]
+        h = _embed_inputs(cfg, params["embed"], inputs)
+        max_seq = caches[_global_sub_index(subs)]["k"].shape[2]
+        h, aux, new_caches = _scan(params, h, positions, "chunk",
+                                   caches=caches, pos=pos0, max_seq=max_seq)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return _logits(params["embed"], cfg, h), list(new_caches)
+
     def init_cache(batch: int, max_seq: int):
         caches, axes = [], []
         for sub in subs:
@@ -427,6 +453,7 @@ def _build_transformer(cfg, mesh, parallel, policy=None):
 
     return SimpleNamespace(cfg=cfg, init=init, forward=forward,
                            prefill=prefill, decode=decode,
+                           prefill_chunk=prefill_chunk,
                            init_cache=init_cache, n_super=n_super, subs=subs,
                            grad_masks=grad_masks)
 

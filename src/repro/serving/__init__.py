@@ -1,8 +1,10 @@
-"""Async serving plane: engines, lifecycle-managed replicas, autoscaling."""
+"""Async serving plane: engines, lifecycle-managed replicas, autoscaling,
+chunked prefill with cross-request prefix caching."""
 from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.engine import (EdgeRouter, Request, ServingEngine,
                                   greedy_generate)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.replica import ReplicaSet
 
-__all__ = ["Autoscaler", "AutoscalerConfig", "EdgeRouter", "Request",
-           "ReplicaSet", "ServingEngine", "greedy_generate"]
+__all__ = ["Autoscaler", "AutoscalerConfig", "EdgeRouter", "PrefixCache",
+           "Request", "ReplicaSet", "ServingEngine", "greedy_generate"]

@@ -31,6 +31,11 @@ class AutoscalerConfig:
     scale_down_load: float = 0.5
     # optional latency SLO: p95 above this also triggers growth
     latency_p95_slo_s: Optional[float] = None
+    # chunked prefill admits prompts far longer than one admission batch, so
+    # request count alone under-states pressure: prompt tokens still waiting
+    # for a KV cache (queued + mid-chunking) above this per-replica level
+    # also trigger growth. None disables the signal.
+    scale_up_prefill_tokens: Optional[float] = None
     # only latency samples from this trailing window count toward the SLO
     # (an all-time p95 would keep a long-idle system "hot" forever)
     latency_window_s: float = 10.0
@@ -63,14 +68,20 @@ class Autoscaler:
                            load_per_replica)
         self.monitor.gauge(self.rs.name, "replicas", n)
         lat = {}
+        backlog = 0
         for e in list(self.rs.engines):
             s = self.monitor.gauge_stats(e.name, "latency_s",
                                          window_s=self.cfg.latency_window_s)
             if s["n"]:
                 lat[e.name] = s
+            backlog += getattr(e, "prefill_backlog", 0)
         p95 = max((s["p95"] for s in lat.values()), default=None)
+        backlog_per_replica = backlog / n
+        self.monitor.gauge(self.rs.name, "prefill_backlog_per_replica",
+                           backlog_per_replica)
         return {"load_per_replica": load_per_replica, "replicas": n,
-                "latency_p95_s": p95}
+                "latency_p95_s": p95,
+                "prefill_backlog_per_replica": backlog_per_replica}
 
     # -- decision ----------------------------------------------------------
     def evaluate(self) -> str:
@@ -84,6 +95,9 @@ class Autoscaler:
         slo = self.cfg.latency_p95_slo_s
         if slo is not None and sig["latency_p95_s"] is not None:
             hot = hot or sig["latency_p95_s"] > slo
+        if self.cfg.scale_up_prefill_tokens is not None:
+            hot = hot or (sig["prefill_backlog_per_replica"]
+                          > self.cfg.scale_up_prefill_tokens)
         if hot:
             if n < self.cfg.max_replicas:
                 self.rs.scale_to(n + 1)

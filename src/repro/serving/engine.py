@@ -13,6 +13,14 @@ prefill* (one ``prefill`` call for every newly admitted slot instead of one
 batch-1 call per request), and ``stop()`` signals it through a real
 ``threading.Event``. The synchronous ``run_until_idle`` path is kept for
 deterministic single-threaded use (tests, oracles).
+
+With ``chunk_tokens`` set (padding-safe models only), long prompts are
+*chunk-prefilled*: the prompt enters the per-slot cache in chunk-sized
+pieces, one chunk per decode step, so a long admission never stalls tokens
+for requests already decoding. Chunk boundaries feed an optional
+cross-request ``PrefixCache`` (see ``repro.serving.prefix_cache``): requests
+sharing a prompt head restore the deepest cached boundary and recompute only
+their tail.
 """
 from __future__ import annotations
 
@@ -92,7 +100,8 @@ class ServingEngine:
 
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
                  name: str = "engine0", monitor=None, prefill_bucket: int = 16,
-                 devices=None):
+                 devices=None, chunk_tokens: Optional[int] = None,
+                 prefix_cache=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -101,6 +110,8 @@ class ServingEngine:
         self.name = name
         self.monitor = monitor
         self.prefill_bucket = max(1, prefill_bucket)
+        self.chunk_tokens = int(chunk_tokens) if chunk_tokens else 0
+        self.prefix_cache = prefix_cache
         self.cache, _ = model.init_cache(slots, max_seq)
         self.devices = tuple(devices) if devices else ()
         if self.devices:
@@ -117,10 +128,15 @@ class ServingEngine:
             self.cache = jax.device_put(self.cache, target)
         self.pos = np.zeros((slots,), np.int32) - 1    # -1: free slot
         self.active: List[Optional[Request]] = [None] * slots
+        # slot -> next prompt position to prefill; a slot present here holds
+        # an admitted request still being chunk-prefilled (it is excluded
+        # from decode until its prompt is fully in cache)
+        self._prefilling: dict = {}
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.metrics = {"requests": 0, "tokens": 0, "prefills": 0,
                         "prefill_requests": 0, "decode_steps": 0,
-                        "completed": 0}
+                        "completed": 0, "prefill_chunks": 0,
+                        "prefill_tokens": 0, "prefix_hit_tokens": 0}
         # jitted prefill/decode are shared across all engines with the same
         # (model, slots, max_seq): replicas and failover respawns then reuse
         # one compile instead of paying it per replica. Prefill is jitted
@@ -137,6 +153,59 @@ class ServingEngine:
                 jax.jit(lambda p, t: model.prefill(p, t, max_seq)[1]))
         self._decode, self._prefill = jit_cache[key]
         self._pad_ok = _padding_safe(model, max_seq)
+        # chunked prefill is exact only where padded prefill is (all-global
+        # attention: chunk K/V writes land at absolute positions and the
+        # chunk mask is position-based); rolling/SSM/MoE models keep the
+        # whole-prompt path
+        self._chunk_ok = bool(self.chunk_tokens) and self._pad_ok and \
+            getattr(model, "prefill_chunk", None) is not None
+        if self.chunk_tokens and not self._chunk_ok and monitor is not None:
+            monitor.log(name, "chunked_prefill_unsupported",
+                        reason="model is not padding-safe (rolling/SSM/MoE)"
+                        if getattr(model, "prefill_chunk", None) is not None
+                        else "model has no prefill_chunk")
+        if self._chunk_ok:
+            ckey = (slots, max_seq, self.chunk_tokens)
+            if ckey not in jit_cache:
+                def chunk_fn(p, cache, toks, pos0, slot):
+                    # slice one slot out of the batched cache, run the chunk
+                    # against it, scatter the updated slice back — slot and
+                    # pos0 are traced, so one compile serves every slot and
+                    # chunk offset
+                    sl = jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, 1),
+                        cache)
+                    _, new_sl = model.prefill_chunk(p, sl, toks, pos0)
+                    return jax.tree.map(
+                        lambda full, s:
+                        jax.lax.dynamic_update_slice_in_dim(full, s, slot, 1),
+                        cache, new_sl)
+                jit_cache[ckey] = jax.jit(chunk_fn)
+            self._chunk = jit_cache[ckey]
+            # prefix-cache restore/extract with a *traced* slot index: a
+            # plain eager cache.at[:, slot, :L].set() bakes the slot in as
+            # a constant and recompiles per slot, which showed up as ~200ms
+            # admission stalls. One compile per prefix length L instead.
+            pkey = (slots, max_seq, "prefix")
+            if pkey not in jit_cache:
+                def restore_fn(cache, entry, slot):
+                    return jax.tree.map(
+                        lambda full, ent: jax.lax.dynamic_update_slice(
+                            full, ent[:, None].astype(full.dtype),
+                            (0, slot) + (0,) * (full.ndim - 2)),
+                        cache, entry)
+
+                def extract_fn(cache, slot, start, length):
+                    # start is traced (the slice length is always one chunk,
+                    # so a static start would recompile per boundary offset)
+                    return jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            jax.lax.dynamic_slice_in_dim(x, slot, 1, 1),
+                            start, length, 2)[:, 0],
+                        cache)
+                jit_cache[pkey] = (jax.jit(restore_fn),
+                                   jax.jit(extract_fn, static_argnums=3))
+            self._pc_restore, self._pc_extract = jit_cache[pkey]
         # -- async decode loop state --------------------------------------
         self._stop = threading.Event()
         self._wake = threading.Event()
@@ -196,8 +265,10 @@ class ServingEngine:
             self.active[r.slot] = r
 
     def _admit(self):
-        """Fill free slots from the queue with a single padded batched
-        prefill (per prompt-length group when padding is unsafe)."""
+        """Fill free slots from the queue: long prompts (and any prompt when
+        a prefix cache may hold its head) enter the chunk-wise prefill
+        state; the rest take a single padded batched prefill (per
+        prompt-length group when padding is unsafe)."""
         batch: List[Request] = []
         for slot in range(self.slots):
             if self.active[slot] is not None:
@@ -207,7 +278,17 @@ class ServingEngine:
             except queue.Empty:
                 break
             r.slot = slot
-            batch.append(r)
+            # chunked admission for prompts longer than one chunk, or ones a
+            # prefix cache could serve (>= one chunk boundary); sub-chunk
+            # prompts can neither hit nor seed the cache, so they keep the
+            # fused padded batched prefill
+            if self._chunk_ok and (
+                    len(r.tokens) > self.chunk_tokens
+                    or (self.prefix_cache is not None
+                        and len(r.tokens) >= self.chunk_tokens)):
+                self._admit_chunked(r)
+            else:
+                batch.append(r)
         if not batch:
             return
         if self._pad_ok:
@@ -231,20 +312,122 @@ class ServingEngine:
                     self.monitor.log(self.name, "prefill_error",
                                      error=repr(exc), requests=len(grp))
 
+    # -- chunked prefill ---------------------------------------------------
+    def _admit_chunked(self, r: Request):
+        """Admit a request into the chunk-wise prefill state, restoring the
+        deepest prefix-cache boundary first so only the uncovered tail is
+        computed."""
+        start = 0
+        if self.prefix_cache is not None:
+            covered, entry = self.prefix_cache.lookup(r.tokens)
+            if covered:
+                try:
+                    self.cache = self._pc_restore(
+                        self.cache, jax.tree.map(jnp.asarray, entry),
+                        np.int32(r.slot))
+                    start = covered
+                    self.metrics["prefix_hit_tokens"] += covered
+                except Exception as exc:
+                    # a bad entry (e.g. adopted from an incompatible pool)
+                    # must degrade to a miss — an unhandled raise here would
+                    # strand the already-dequeued request forever and fail
+                    # every other in-flight request via _fail_inflight
+                    start = 0
+                    if self.monitor is not None:
+                        self.monitor.log(self.name, "prefix_restore_error",
+                                         error=repr(exc), covered=covered)
+        self.active[r.slot] = r
+        if start >= len(r.tokens):
+            # the whole prompt was cached: straight to decode (the first
+            # decode step recomputes the last prompt token at pos len-1,
+            # overwriting its cached K/V with identical values)
+            self.pos[r.slot] = len(r.tokens) - 1
+            self.metrics["prefill_requests"] += 1
+        else:
+            self.pos[r.slot] = -1           # not decoding yet
+            self._prefilling[r.slot] = start
+
+    def _prefill_step(self):
+        """Advance every chunk-prefilling slot by one chunk. Runs before the
+        fused decode step, so long prompts trickle in between decode steps
+        instead of stalling already-admitted requests."""
+        for slot, start in list(self._prefilling.items()):
+            r = self.active[slot]
+            plen = len(r.tokens)
+            c = self.chunk_tokens
+            end = min(start + c, plen)
+            toks = np.zeros((1, c), np.int32)   # final partial chunk padded:
+            toks[0, :end - start] = r.tokens[start:end]   # one compile per C
+            try:
+                self.cache = self._chunk(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray([start], jnp.int32), np.int32(slot))
+            except Exception as exc:
+                del self._prefilling[slot]
+                self.active[slot] = None
+                self.pos[slot] = -1
+                if not r.future.done():
+                    r.future.set_exception(exc)
+                if self.monitor is not None:
+                    self.monitor.log(self.name, "prefill_error",
+                                     error=repr(exc), requests=1)
+                continue
+            self.metrics["prefill_chunks"] += 1
+            self.metrics["prefill_tokens"] += end - start
+            if self.prefix_cache is not None and end % c == 0 \
+                    and not self.prefix_cache.contains(r.tokens[:end]):
+                # the cache stores per-chunk slices: offer only this
+                # chunk's [end-c, end) positions (the trie chain supplies
+                # the rest on restore)
+                entry = self._pc_extract(self.cache, np.int32(slot),
+                                         np.int32(end - c), c)
+                self.prefix_cache.insert(r.tokens[:end], entry)
+            if end >= plen:
+                del self._prefilling[slot]
+                self.pos[slot] = plen - 1       # ready for decode
+                self.metrics["prefill_requests"] += 1
+            else:
+                self._prefilling[slot] = end
+
+    @property
+    def prefill_backlog(self) -> int:
+        """Prompt tokens admitted-or-queued but not yet in a KV cache — the
+        admission pressure signal (queue depth alone under-counts a backlog
+        of long prompts). Read from the autoscaler thread while the decode
+        loop mutates: list(deque) / dict(dict) are C-level (GIL-atomic)
+        snapshots, and a racing slot reuse only skews the gauge briefly."""
+        queued = sum(len(r.tokens) for r in list(self.queue.queue))
+        chunking = 0
+        for s, p in dict(self._prefilling).items():
+            r = self.active[s]
+            if r is not None:
+                chunking += len(r.tokens) - p
+        return queued + chunking
+
     # -- decode step -------------------------------------------------------
     def step(self) -> int:
         """One fused decode step for all active slots. Returns #active."""
         self._admit()
-        active = [i for i in range(self.slots) if self.active[i] is not None]
+        if self._prefilling:
+            self._prefill_step()
+        active = [i for i in range(self.slots)
+                  if self.active[i] is not None and i not in self._prefilling]
+        if self.monitor is not None and (self._prefilling or self.queue.qsize()):
+            self.monitor.gauge(self.name, "prefill_backlog",
+                               self.prefill_backlog)
         if not active:
-            return 0
+            return len(self._prefilling)
         toks = np.zeros((self.slots, 1), np.int32)
-        for i in range(self.slots):
+        # idle / still-prefilling rows decode a scratch token at position
+        # max_seq-1 (never written or attended by a real request: admission
+        # requires len+1 <= max_seq and decode stops at pos+1 >= max_seq),
+        # so the fused decode can't clobber a half-prefilled slot's cache
+        pos = np.full((self.slots,), self.max_seq - 1, np.int32)
+        for i in active:
             r = self.active[i]
-            if r is not None:
-                toks[i, 0] = (r.generated[-1] if r.generated
-                              else int(r.tokens[-1]))
-        pos = np.maximum(self.pos, 0).astype(np.int32)
+            toks[i, 0] = (r.generated[-1] if r.generated
+                          else int(r.tokens[-1]))
+            pos[i] = max(int(self.pos[i]), 0)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
         next_tokens = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size],
@@ -275,7 +458,7 @@ class ServingEngine:
                 self.pos[i] = -1
         if self.monitor is not None:
             self.monitor.gauge(self.name, "queue_depth", self.load)
-        return len(active)
+        return len(active) + len(self._prefilling)
 
     # -- synchronous loop (tests / oracles) --------------------------------
     def run_until_idle(self, max_steps: int = 10_000):
@@ -334,6 +517,7 @@ class ServingEngine:
                 reqs.append(self.active[i])
             self.active[i] = None
             self.pos[i] = -1
+        self._prefilling.clear()
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(exc)
@@ -406,6 +590,7 @@ class ServingEngine:
                 out.append(r)
             self.active[i] = None
             self.pos[i] = -1
+        self._prefilling.clear()
         for r in out:
             r.reset_for_retry()
         return out

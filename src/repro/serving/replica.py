@@ -52,11 +52,16 @@ class ReplicaSet:
                  replicas: int = 2, *, name: str = "lm-server",
                  monitor=None, heartbeat_timeout: float = 30.0,
                  check_interval: float = 0.05, respawn: bool = False,
-                 mesh=None, devices: Optional[Sequence] = None):
+                 mesh=None, devices: Optional[Sequence] = None,
+                 prefix_cache=None):
         assert replicas >= 1
         self.factory = factory
         self.name = name
         self.monitor = monitor
+        # the shared cross-replica prefix cache (engines get it via the
+        # factory closure); held here so detach/adopt can carry it to a
+        # successor pool across an elastic mesh resize
+        self.prefix_cache = prefix_cache
         self.heartbeat_timeout = heartbeat_timeout
         self.check_interval = check_interval
         self.respawn = respawn
@@ -381,6 +386,22 @@ class ReplicaSet:
         stay attached, so original waiters see the results)."""
         self._requeue(list(requests), why)
 
+    def adopt_prefix_cache(self, predecessor) -> int:
+        """Carry a predecessor pool's prefix-cache entries into this pool's
+        cache (elastic resize: the successor adopts). Entries are host-side
+        numpy, so they stay valid across the placement change; incompatible
+        chunking (or a successor without a cache) drops them coherently.
+        The arch is the resize invariant (the service is rebuilt from the
+        same config); if it ever differs, the engine's restore fallback
+        turns the stale entries into misses. Returns the number of entries
+        carried."""
+        if self.prefix_cache is None or predecessor is None:
+            return 0
+        n = self.prefix_cache.adopt_entries(predecessor)
+        if self.monitor is not None and n:
+            self.monitor.log(self.name, "prefix_cache_adopted", entries=n)
+        return n
+
     # -- introspection -----------------------------------------------------
     @property
     def load(self) -> int:
@@ -410,6 +431,9 @@ class ReplicaSet:
         for m in list(per.values()) + list(retired.values()):
             for k, v in m.items():
                 agg[k] = agg.get(k, 0) + v
-        return {"replicas": len(per), "failovers": self._failovers,
-                "rebalances": self._rebalances,
-                "per_replica": per, "retired": retired, "total": agg}
+        out = {"replicas": len(per), "failovers": self._failovers,
+               "rebalances": self._rebalances,
+               "per_replica": per, "retired": retired, "total": agg}
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out

@@ -1,0 +1,319 @@
+"""Chunked prefill + cross-request prefix caching: token parity with the
+stepwise oracle across chunk-boundary edge cases, interleaving with decode,
+LRU eviction, and carry across pool generations."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.monitoring import Monitor
+from repro.models.model import build_model
+from repro.serving.engine import ServingEngine, greedy_generate
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.replica import ReplicaSet
+
+MAX_SEQ = 96
+CHUNK = 16
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get_config("yi-9b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("chunk_tokens", CHUNK)
+    return ServingEngine(model, params, **kw)
+
+
+def _check_oracle(model, params, eng, prompts, max_new=5):
+    futs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run_until_idle()
+    for p, f in zip(prompts, futs):
+        ref = greedy_generate(model, params, p, max_new, eng.max_seq)
+        np.testing.assert_array_equal(f.result(), ref)
+
+
+# -- chunk-boundary edge cases ----------------------------------------------
+
+def test_prompt_exactly_bucket_multiple(served_model):
+    """Prompt lengths landing exactly on a chunk boundary (1x and 3x) must
+    not double-write or skip the boundary position."""
+    cfg, model, params = served_model
+    eng = _engine(model, params)
+    assert eng._chunk_ok
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n)
+               for n in (CHUNK, 3 * CHUNK)]
+    _check_oracle(model, params, eng, prompts)
+
+
+def test_single_token_prompt_keeps_batched_path(served_model):
+    """A 1-token prompt can neither hit nor seed the prefix cache (no chunk
+    boundary fits), so even with chunking + cache enabled it keeps the fused
+    batched prefill — and stays exact."""
+    cfg, model, params = served_model
+    pc = PrefixCache(CHUNK, budget_bytes=1 << 20)
+    eng = _engine(model, params, prefix_cache=pc)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=1)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["prefill_chunks"] == 0
+    assert eng.metrics["prefills"] == 1
+    assert pc.stats()["hits"] == pc.stats()["misses"] == 0
+
+
+def test_exact_chunk_prompt_via_chunked_path(served_model):
+    """A prompt of exactly chunk_tokens goes chunked when a cache is
+    present (it can seed and later fully hit a boundary); still exact."""
+    cfg, model, params = served_model
+    pc = PrefixCache(CHUNK, budget_bytes=1 << 20)
+    eng = _engine(model, params, prefix_cache=pc)
+    rng = np.random.default_rng(11)
+    p = rng.integers(1, cfg.vocab_size, size=CHUNK)
+    _check_oracle(model, params, eng, [p], max_new=4)
+    assert eng.metrics["prefill_chunks"] == 1
+    f = eng.submit(p, max_new_tokens=4)     # whole-prompt boundary hit
+    eng.run_until_idle()
+    assert pc.stats()["hits"] == 1
+    np.testing.assert_array_equal(
+        f.result(), greedy_generate(model, params, p, 4, MAX_SEQ))
+
+
+def test_chunk_boundary_mid_prompt(served_model):
+    """Lengths straddling chunk boundaries (final partial chunk is padded)
+    stay token-identical to the oracle."""
+    cfg, model, params = served_model
+    eng = _engine(model, params)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n)
+               for n in (CHUNK + 1, 2 * CHUNK - 1, 37)]
+    _check_oracle(model, params, eng, prompts)
+
+
+def test_long_prompt_beyond_one_admission_batch(served_model):
+    """The workload the pre-chunking plane could only take as one giant
+    padded prefill: a prompt many buckets long completes token-identically
+    while decode keeps running (acceptance criterion)."""
+    cfg, model, params = served_model
+    eng = _engine(model, params)
+    rng = np.random.default_rng(3)
+    long_prompt = rng.integers(1, cfg.vocab_size, size=78)
+    _check_oracle(model, params, eng, [long_prompt], max_new=6)
+    assert eng.metrics["prefill_chunks"] >= 5     # 78 tokens / 16-chunks
+
+
+def test_long_prefill_does_not_stall_admitted_decode(served_model):
+    """Chunk-wise prefill interleaves with decode: a short request admitted
+    alongside a long prompt finishes while the long prompt is still
+    prefilling (the TTFT-protection property, stepped deterministically)."""
+    cfg, model, params = served_model
+    eng = _engine(model, params, chunk_tokens=8)
+    rng = np.random.default_rng(4)
+    long_r = eng.submit_request(rng.integers(1, cfg.vocab_size, size=80),
+                                max_new_tokens=4)
+    short_r = eng.submit_request(rng.integers(1, cfg.vocab_size, size=5),
+                                 max_new_tokens=3)
+    for _ in range(6):        # 6 steps: short (1 prefill + 3 decodes) done,
+        eng.step()            # long still chunking (80 / 8 = 10 chunks)
+    assert short_r.future.done()
+    assert not long_r.future.done()
+    assert long_r.slot in eng._prefilling
+    eng.run_until_idle()
+    ref = greedy_generate(model, params, long_r.tokens, 4, MAX_SEQ)
+    np.testing.assert_array_equal(long_r.future.result(), ref)
+
+
+# -- prefix caching ----------------------------------------------------------
+
+def test_prefix_cache_hit_token_identical(served_model):
+    """Requests sharing a prompt head: later ones restore the cached head
+    (skipping its recompute) and must produce exactly the uncached oracle's
+    tokens."""
+    cfg, model, params = served_model
+    mon = Monitor()
+    pc = PrefixCache(CHUNK, budget_bytes=16 << 20, monitor=mon)
+    eng = _engine(model, params, prefix_cache=pc, monitor=mon)
+    rng = np.random.default_rng(5)
+    head = rng.integers(1, cfg.vocab_size, size=3 * CHUNK)
+    first = np.concatenate([head, rng.integers(1, cfg.vocab_size, size=7)])
+    f0 = eng.submit(first, max_new_tokens=5)
+    eng.run_until_idle()                    # seeds boundaries 16/32/48
+    base_tokens = eng.metrics["prefill_tokens"]
+    others = [np.concatenate([head,
+                              rng.integers(1, cfg.vocab_size, size=k)])
+              for k in (4, 9, 12)]
+    futs = [eng.submit(p, max_new_tokens=5) for p in others]
+    eng.run_until_idle()
+    for p, f in zip([first] + others, [f0] + futs):
+        ref = greedy_generate(model, params, p, 5, MAX_SEQ)
+        np.testing.assert_array_equal(f.result(), ref)
+    assert pc.stats()["hits"] == 3
+    assert eng.metrics["prefix_hit_tokens"] == 3 * len(head)
+    # only the uncovered tails were recomputed
+    assert eng.metrics["prefill_tokens"] - base_tokens < len(head) * 3
+    assert mon.gauge_last(pc.name, "prefix_cache_hits") == 3
+
+
+def test_prefix_cache_whole_prompt_hit(served_model):
+    """A prompt that is exactly a cached boundary (whole prompt covered, no
+    chunks to run) must go straight to decode and stay exact."""
+    cfg, model, params = served_model
+    pc = PrefixCache(CHUNK, budget_bytes=16 << 20)
+    eng = _engine(model, params, prefix_cache=pc)
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, cfg.vocab_size, size=2 * CHUNK)
+    f0 = eng.submit(p, max_new_tokens=4)
+    eng.run_until_idle()
+    chunks_before = eng.metrics["prefill_chunks"]
+    f1 = eng.submit(p, max_new_tokens=4)    # identical prompt: full cover
+    eng.run_until_idle()
+    assert eng.metrics["prefill_chunks"] == chunks_before
+    ref = greedy_generate(model, params, p, 4, MAX_SEQ)
+    np.testing.assert_array_equal(f0.result(), ref)
+    np.testing.assert_array_equal(f1.result(), ref)
+
+
+def test_prefix_cache_lru_eviction(served_model):
+    """A byte budget below the working set forces LRU eviction (gauged);
+    evicted prefixes simply recompute — still exact."""
+    cfg, model, params = served_model
+    mon = Monitor()
+    # one 16-token boundary entry is ~8KB for this reduced config; a 20KB
+    # budget holds ~2 entries
+    pc = PrefixCache(CHUNK, budget_bytes=20 << 10, monitor=mon)
+    eng = _engine(model, params, prefix_cache=pc, monitor=mon)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=2 * CHUNK)
+               for _ in range(4)]           # 4 distinct heads, 2 entries each
+    _check_oracle(model, params, eng, prompts, max_new=3)
+    st = pc.stats()
+    assert st["evictions"] > 0
+    assert st["bytes"] <= pc.budget
+    assert mon.gauge_last(pc.name, "prefix_cache_evictions") \
+        == st["evictions"]
+
+
+def test_prefix_cache_carry_and_drop(served_model):
+    """adopt_entries carries host-side entries to a successor pool's cache
+    (elastic resize) and coherently drops on a chunk-size mismatch."""
+    cfg, model, params = served_model
+    pc_old = PrefixCache(CHUNK, budget_bytes=16 << 20)
+    eng = _engine(model, params, prefix_cache=pc_old)
+    rng = np.random.default_rng(8)
+    p = rng.integers(1, cfg.vocab_size, size=3 * CHUNK + 5)
+    eng.submit(p, max_new_tokens=3)
+    eng.run_until_idle()
+    assert len(pc_old) == 3
+    # scramble LRU recency: a partial lookup touches only the first chain
+    # link, putting a child link in front of its ancestor — adoption must
+    # still carry whole chains (ancestors-first), not drop the children
+    assert pc_old.lookup(p[:CHUNK])[0] == CHUNK
+    pc_new = PrefixCache(CHUNK, budget_bytes=16 << 20)
+    assert pc_new.adopt_entries(pc_old) == 3
+    covered, entry = pc_new.lookup(p)
+    assert covered == 3 * CHUNK and entry is not None
+    # successor with different chunking: boundaries incoherent -> drop all
+    pc_mismatch = PrefixCache(CHUNK // 2, budget_bytes=16 << 20)
+    assert pc_mismatch.adopt_entries(pc_old) == 0
+    assert len(pc_mismatch) == 0
+    # adopted entries serve hits in a fresh engine (new pool generation)
+    hits_before = pc_new.stats()["hits"]
+    eng2 = _engine(model, params, prefix_cache=pc_new, name="gen2")
+    f = eng2.submit(p, max_new_tokens=3)
+    eng2.run_until_idle()
+    assert pc_new.stats()["hits"] == hits_before + 1
+    ref = greedy_generate(model, params, p, 3, MAX_SEQ)
+    np.testing.assert_array_equal(f.result(), ref)
+
+
+def test_replicaset_failover_preserves_chunking_requests(served_model):
+    """A replica killed mid-chunk-prefill: the ReplicaSet reschedules the
+    request and the retry (prompt restart) stays token-identical."""
+    cfg, model, params = served_model
+    pc = PrefixCache(CHUNK, budget_bytes=16 << 20)
+
+    def factory(i, devices=None):
+        return ServingEngine(model, params, slots=2, max_seq=MAX_SEQ,
+                             name=f"cr{i}", chunk_tokens=CHUNK,
+                             prefix_cache=pc)
+
+    rs = ReplicaSet(factory, replicas=2, respawn=True, prefix_cache=pc,
+                    check_interval=0.02)
+    rs.start()
+    try:
+        rng = np.random.default_rng(9)
+        prompts = [rng.integers(1, cfg.vocab_size, size=70)
+                   for _ in range(4)]
+        reqs = [rs.submit_request(p, max_new_tokens=4) for p in prompts]
+        rs.engines[0].kill()
+        for r in reqs:
+            r.future.result(timeout=300)
+        for p, r in zip(prompts, reqs):
+            ref = greedy_generate(model, params, p, 4, MAX_SEQ)
+            np.testing.assert_array_equal(r.future.result(), ref)
+        assert rs.metrics()["failovers"] >= 1
+    finally:
+        rs.stop()
+
+
+# -- admission pressure signal -----------------------------------------------
+
+def test_autoscaler_scales_on_prefill_backlog():
+    """Chunked admission means request count under-states pressure: a
+    backlog of long prompts (many tokens awaiting KV state) must trigger
+    scale-up even at low request counts."""
+    from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+
+    class StubEngine:
+        def __init__(self, backlog):
+            self.name = "stub"
+            self.prefill_backlog = backlog
+
+    class StubSet:
+        def __init__(self, backlog):
+            self.name = "stub-set"
+            self.size = 1
+            self.load = 1            # one outstanding request: "cold" by
+            self.engines = [StubEngine(backlog)]    # the request-count rule
+            self.scaled = []
+
+        def scale_to(self, n):
+            self.scaled.append(n)
+            return n
+
+    mon = Monitor()
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=3,
+                           scale_up_load=3.0,
+                           scale_up_prefill_tokens=256.0)
+    rs_cold = StubSet(backlog=100)
+    assert Autoscaler(rs_cold, mon, cfg).evaluate() == "hold"
+    rs_hot = StubSet(backlog=2000)
+    assert Autoscaler(rs_hot, mon, cfg).evaluate() == "up"
+    assert rs_hot.scaled == [2]
+    assert mon.gauge_last("stub-set", "prefill_backlog_per_replica") == 2000
+
+
+# -- fallback gating ---------------------------------------------------------
+
+def test_rolling_cache_model_declines_chunking():
+    """Rolling/SSM/MoE models are not padding-safe; chunk_tokens must fall
+    back to the whole-prompt path (and stay exact) rather than corrupt a
+    rolling cache."""
+    cfg = reduced(get_config("gemma2-27b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, slots=2, max_seq=96, chunk_tokens=16)
+    assert not eng._chunk_ok
+    rng = np.random.default_rng(10)
+    p = rng.integers(1, cfg.vocab_size, size=20)
+    f = eng.submit(p, max_new_tokens=4)
+    eng.run_until_idle()
+    assert eng.metrics["prefill_chunks"] == 0
+    ref = greedy_generate(model, params, p, 4, 96)
+    np.testing.assert_array_equal(f.result(), ref)

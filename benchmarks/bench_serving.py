@@ -274,9 +274,11 @@ def _elastic(fast: bool) -> dict:
     }
 
 
-def _elastic_subprocess(fast: bool, n_devices: int = 4) -> dict:
-    """Re-exec the elastic scenario with forced host devices (the parent
-    process already initialized its backend with a single device)."""
+def _forced_devices_subprocess(extra_args, fast: bool,
+                               n_devices: int = 4) -> dict:
+    """Re-exec this benchmark with forced host devices and the given entry
+    flags, returning its JSON report (the parent process already
+    initialized its backend, usually with a single device)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
                         f"{n_devices}")
@@ -286,19 +288,73 @@ def _elastic_subprocess(fast: bool, n_devices: int = 4) -> dict:
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(root, "src"), root,
                     env.get("PYTHONPATH", "")) if p)
-    args = [sys.executable, os.path.abspath(__file__), "--elastic-only"]
+    args = [sys.executable, os.path.abspath(__file__)] + list(extra_args)
     if fast:
         args.append("--fast")
     r = subprocess.run(args, capture_output=True, text=True, env=env,
                        timeout=1200)
     if r.returncode != 0:
-        raise RuntimeError(f"elastic subprocess failed:\n{r.stdout[-2000:]}"
-                           f"\n{r.stderr[-4000:]}")
+        raise RuntimeError(f"benchmark subprocess {extra_args} failed:\n"
+                           f"{r.stdout[-2000:]}\n{r.stderr[-4000:]}")
     return json.loads(r.stdout)
 
 
+def _elastic_subprocess(fast: bool, n_devices: int = 4) -> dict:
+    return _forced_devices_subprocess(["--elastic-only"], fast, n_devices)
+
+
+def _fleet_one(mode: str, fast: bool) -> dict:
+    """Child entry: one fleet scenario run (arbitrated or static) in a
+    pristine process — back-to-back scenario runs in one process skew the
+    second run's walls (thread/allocator state), so each mode gets its own
+    interpreter and the parent computes the ratio."""
+    from repro.fleet.driver import run_fleet_scenario
+
+    rep = run_fleet_scenario(
+        2 if fast else 3,
+        workdir=tempfile.mkdtemp(prefix=f"bench_fleet_{mode}_"),
+        requests_per_phase=24 if fast else 32,
+        static=(mode == "static"), rng=np.random.default_rng(0))
+    return rep
+
+
+def _fleet(fast: bool) -> dict:
+    """Fleet arbitration payoff: the same phase-shifted multi-tenant burst
+    workload over one shared pool, arbitrated (admission queueing +
+    priority preemption moving slot capacity to the hot tenant) vs a
+    static equal-split partition. Gates: the arbiter must win on aggregate
+    tok/s, preempt at least once, and drop zero requests — including the
+    ones in flight across the preemption."""
+    arb = _fleet_subprocess("arbitrated", fast)
+    st = _fleet_subprocess("static", fast)
+    out = {
+        "tok_per_s_arbitrated": arb["tok_per_s"],
+        "tok_per_s_static": st["tok_per_s"],
+        "speedup": arb["tok_per_s"] / st["tok_per_s"],
+        "preemptions": arb["arbiter"]["preemptions"],
+        "admission_queue_wait_s": arb["arbiter"]["queue_wait_s"],
+        "carried": arb["carried"],
+        "per_vre_arbitrated": arb["per_vre"],
+        "per_vre_static": st["per_vre"],
+        "completion_rate_arbitrated": arb["completion_rate"],
+        "completion_rate_static": st["completion_rate"],
+        "pool_devices": arb["pool_devices"],
+    }
+    assert out["preemptions"] >= 1, "fleet scenario performed no preemption"
+    assert arb["carried"]["completed"] == arb["carried"]["requests"], \
+        "requests in flight across a preemption were dropped"
+    assert arb["completion_rate"] == 1.0 and st["completion_rate"] == 1.0
+    return out
+
+
+def _fleet_subprocess(mode: str, fast: bool) -> dict:
+    return _forced_devices_subprocess(
+        ["--fleet-only", "--fleet-mode", mode], fast)
+
+
 def main(fast: bool = False, elastic: bool = False,
-         long_prompts: bool = False, shared_prefix: bool = False):
+         long_prompts: bool = False, shared_prefix: bool = False,
+         fleet: bool = False):
     tp = _throughput(fast)
     fo = _failover(fast)
     out = {
@@ -314,7 +370,31 @@ def main(fast: bool = False, elastic: bool = False,
         out["shared_prefix"] = _shared_prefix(fast)
     if elastic:
         out["elastic"] = _elastic(fast)
+    if fleet:
+        out["fleet"] = _fleet(fast)
     return out
+
+
+def _stamp(result: dict) -> dict:
+    """Provenance for the perf-history dashboard: git SHA + run timestamp
+    ride inside the report artifact, so a pile of bench-serving JSONs is
+    self-describing without the CI run that produced it."""
+    sha = os.environ.get("GITHUB_SHA")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True,
+                text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__))
+            ).stdout.strip() or None
+        except Exception:
+            sha = None
+    result["meta"] = {
+        "git_sha": sha,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "run_id": os.environ.get("GITHUB_RUN_ID"),
+    }
+    return result
 
 
 def _cli(argv):
@@ -322,9 +402,16 @@ def _cli(argv):
         # subprocess entry: emit exactly the elastic-scenario JSON on stdout
         print(json.dumps(_elastic("--fast" in argv), indent=2))
         return 0
+    if "--fleet-only" in argv:
+        # subprocess entry: one fleet mode per interpreter (see _fleet_one)
+        mode = argv[argv.index("--fleet-mode") + 1]
+        print(json.dumps(_fleet_one(mode, "--fast" in argv), indent=2))
+        return 0
     result = main(fast="--fast" in argv, elastic="--elastic" in argv,
                   long_prompts="--long-prompts" in argv,
-                  shared_prefix="--shared-prefix" in argv)
+                  shared_prefix="--shared-prefix" in argv,
+                  fleet="--fleet" in argv)
+    _stamp(result)
     blob = json.dumps(result, indent=2)
     print(blob)
     if "--out" in argv:

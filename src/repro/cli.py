@@ -101,11 +101,12 @@ def cmd_serve(args):
     end-to-end path: drain, re-instantiate on the grown mesh, re-place
     replicas on disjoint slices, resume."""
     import numpy as np
-    from repro.launch.serve import make_prompts, run_elastic_serve, run_load
+    from repro.launch.serve import (make_prompts, run_elastic_serve,
+                                    run_load, validate_serving_args)
 
-    if args.prefix_cache_mb and not args.chunk_tokens:
-        sys.exit("serve: --prefix-cache-mb requires --chunk-tokens "
-                 "(prefix entries live at chunk boundaries)")
+    validate_serving_args(args, lambda msg: sys.exit(f"serve: {msg}"))
+    args.chunk_tokens = args.chunk_tokens or 0
+    args.prefix_cache_mb = args.prefix_cache_mb or 0.0
     d = Path(args.dir)
     vre, _ = _load_vre(d)
     if "lm-server" not in vre.config.services:
@@ -134,6 +135,42 @@ def cmd_serve(args):
         print(json.dumps(report, indent=2))
     finally:
         vre.destroy()
+
+
+def cmd_fleet(args):
+    """Run 2-3 VREs over one shared device pool under the FleetArbiter,
+    with phase-shifted Poisson load (each VRE gets one hot phase); prints
+    the fleet report JSON. Needs at least ``--vres`` jax devices — force
+    host devices via XLA_FLAGS=--xla_force_host_platform_device_count=N
+    for a laptop dry-run (the benchmark harness does this automatically)."""
+    import jax
+    import numpy as np
+    from repro.fleet.driver import run_fleet_scenario
+    from repro.launch.serve import validate_serving_args
+
+    validate_serving_args(args, lambda msg: sys.exit(f"fleet: {msg}"),
+                          zero_disables=True)
+    # fleet knobs are enabled by default (None -> scenario defaults);
+    # an explicit 0 disables — chunking off forces the cache off too,
+    # since prefix entries live at chunk boundaries
+    chunk_tokens = 16 if args.chunk_tokens is None else args.chunk_tokens
+    prefix_cache_mb = 32.0 if args.prefix_cache_mb is None \
+        else args.prefix_cache_mb
+    if not chunk_tokens:
+        prefix_cache_mb = 0.0
+    if len(jax.devices()) < args.vres:
+        sys.exit(f"fleet: {args.vres} VREs need >= {args.vres} devices, "
+                 f"provider has {len(jax.devices())}; set XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count=N for a dry-run")
+    report = run_fleet_scenario(
+        args.vres, arch=args.arch, workdir=args.workdir,
+        requests_per_phase=args.requests, rate_rps=args.rate,
+        max_new_tokens=args.max_new, chunk_tokens=chunk_tokens,
+        prefix_cache_mb=prefix_cache_mb,
+        shared_prefix_len=args.shared_prefix, static=args.static,
+        rng=np.random.default_rng(args.seed))
+    print(json.dumps(report, indent=2))
+    return report
 
 
 def cmd_destroy(args):
@@ -176,14 +213,43 @@ def main(argv=None):
     p.add_argument("--force-resize", action="store_true",
                    help="request a mesh resize before the inter-wave safe "
                         "point even if the autoscaler didn't")
-    p.add_argument("--chunk-tokens", type=int, default=0,
+    p.add_argument("--chunk-tokens", type=int, default=None,
                    help="chunk-wise prefill in pieces of this many tokens "
                         "(admits long prompts without stalling decode; "
-                        "0 disables)")
-    p.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                        "omit to disable)")
+    p.add_argument("--prefix-cache-mb", type=float, default=None,
                    help="cross-request prefix-cache LRU budget in MiB "
-                        "(requires --chunk-tokens; 0 disables)")
+                        "(requires --chunk-tokens; omit to disable)")
     p.set_defaults(fn=cmd_serve)
+    p = sub.add_parser(
+        "fleet",
+        help="run several VREs over one shared device pool with "
+             "phase-shifted Poisson load, arbitrated by the FleetArbiter")
+    p.add_argument("--vres", type=int, default=2,
+                   help="number of concurrently admitted VREs (each gets "
+                        "one hot load phase)")
+    p.add_argument("--arch", default="yi-9b")
+    p.add_argument("--requests", type=int, default=24,
+                   help="requests per phase for the hot VRE")
+    p.add_argument("--rate", type=float, default=400.0,
+                   help="hot-phase Poisson rate; the default saturates the "
+                        "tenant's slot budget so capacity movement shows")
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--chunk-tokens", type=int, default=None,
+                   help="chunk-wise prefill size per tenant (default 16; "
+                        "0 disables)")
+    p.add_argument("--prefix-cache-mb", type=float, default=None,
+                   help="fleet-shared prefix-cache budget in MiB "
+                        "(default 32; 0 disables)")
+    p.add_argument("--shared-prefix", type=int, default=48,
+                   help="tokens of shared prompt head across all tenants "
+                        "(the fleet prefix cache's cross-VRE payoff)")
+    p.add_argument("--static", action="store_true",
+                   help="baseline: split the pool equally, disable "
+                        "proposals/preemption and cross-VRE prefix sharing")
+    p.add_argument("--workdir", default="/tmp/fleet")
+    p.set_defaults(fn=cmd_fleet)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)
     p.set_defaults(fn=cmd_destroy)

@@ -105,9 +105,13 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
     if vre.pending_resize is None:
         return None
     need = int(np.prod(vre.pending_resize))
-    if len(jax.devices()) < need:
+    # fleet-arbitrated VREs resize within their granted slice of the shared
+    # pool, not against the whole provider
+    have = (len(vre.device_pool) if vre.device_pool is not None
+            else len(jax.devices()))
+    if have < need:
         vre.monitor.log("vre", "resize_infeasible",
-                        want=need, have=len(jax.devices()),
+                        want=need, have=have,
                         shape=list(vre.pending_resize))
         vre.pending_resize = None
         if service in vre.services:

@@ -133,24 +133,70 @@ class ServiceRegistry:
         return sorted(self._specs)
 
 
-class EndpointDirectory:
-    """DynDNS analogue: stable names -> dynamically re-resolved addresses."""
+class StaleEndpoint(KeyError):
+    """A TTL'd directory entry expired and no refresher could re-resolve it
+    (e.g. the VRE moved or was destroyed between leases)."""
 
-    def __init__(self):
+
+class EndpointDirectory:
+    """DynDNS analogue: stable names -> dynamically re-resolved addresses.
+
+    With a ``default_ttl_s`` (or a per-entry ``ttl_s``) an entry is a *lease*:
+    once it expires, ``resolve`` consults the registered refresher — a
+    callback that fetches the current address from the source of truth (the
+    live VRE) — instead of handing out a possibly-stale address. Replicas
+    moving under failover or an elastic resize therefore surface to clients
+    within one TTL, not never. Entries without a TTL behave as before."""
+
+    def __init__(self, default_ttl_s: Optional[float] = None):
         self._entries: Dict[str, dict] = {}
         self._lock = threading.Lock()
+        self.default_ttl_s = default_ttl_s
+        self._refresher = None       # fn(name) -> (address, meta) | None
+        self.refreshes = 0
+        self.stale_misses = 0
 
-    def publish(self, name: str, address: str, meta: Optional[dict] = None):
+    def set_refresher(self, fn):
+        """``fn(name) -> (address, meta) | None`` re-resolves an expired
+        lease from the source of truth; None means the name is gone."""
+        with self._lock:
+            self._refresher = fn
+
+    def publish(self, name: str, address: str, meta: Optional[dict] = None,
+                ttl_s: Optional[float] = None):
+        ttl = ttl_s if ttl_s is not None else self.default_ttl_s
         with self._lock:
             self._entries[name] = {"address": address,
                                    "updated": time.time(),
+                                   "expires": (time.monotonic() + ttl)
+                                              if ttl is not None else None,
+                                   "ttl_s": ttl,
                                    "meta": meta or {}}
 
     def resolve(self, name: str) -> str:
         with self._lock:
-            if name not in self._entries:
-                raise KeyError(f"unresolved endpoint {name!r}")
-            return self._entries[name]["address"]
+            ent = self._entries.get(name)
+            refresher = self._refresher
+            if ent is not None and (ent["expires"] is None
+                                    or time.monotonic() < ent["expires"]):
+                return ent["address"]
+        # expired (or never published): re-resolve outside the lock — the
+        # refresher may call back into services that publish here
+        if refresher is not None:
+            fresh = refresher(name)
+            if fresh is not None:
+                address, meta = fresh
+                ttl = ent["ttl_s"] if ent is not None else None
+                self.publish(name, address, meta, ttl_s=ttl)
+                with self._lock:
+                    self.refreshes += 1
+                return address
+        with self._lock:
+            self.stale_misses += 1
+        if ent is not None:
+            raise StaleEndpoint(f"endpoint {name!r} lease expired and could "
+                                f"not be re-resolved")
+        raise KeyError(f"unresolved endpoint {name!r}")
 
     def withdraw(self, name: str):
         with self._lock:

@@ -36,6 +36,32 @@ def _model_cfg(ctx):
     return cfg
 
 
+_SERVED_MODEL_CACHE: dict = {}
+_SERVED_MODEL_LOCK = __import__("threading").Lock()
+
+
+def _served_model(ctx):
+    """(cfg, model, params) for the serving plane, cached across VREs and
+    re-instantiations — the compiled-kernel analogue of the deployment
+    image cache. An elastic resize (or a fleet preemption) rebuilds the
+    service; a fresh model object would drop the engine jit cache shared
+    through it and pay a full prefill/decode recompile at the worst
+    possible moment (right after the resize, under the very load that
+    triggered it). Keyed by what ``_model_cfg`` derives the config from;
+    params are deterministic (fixed seed), so sharing them across VREs of
+    the same arch is observationally identical to rebuilding."""
+    key = (ctx.config.arch or "yi-9b", ctx.config.provider)
+    with _SERVED_MODEL_LOCK:
+        ent = _SERVED_MODEL_CACHE.get(key)
+        if ent is None:
+            cfg = _model_cfg(ctx)
+            model = build_model(cfg)
+            params, _ = model.init(jax.random.PRNGKey(0))
+            ent = (cfg, model, params)
+            _SERVED_MODEL_CACHE[key] = ent
+    return ent
+
+
 @register_service("volumes", "storage",
                   description="GlusterFS analogue: sharded checkpoint store")
 def build_volumes(ctx):
@@ -146,24 +172,49 @@ class ServingService(ServiceHandle):
                   description="async serving replicas + edge router + "
                               "autoscaler")
 def build_server(ctx):
-    cfg = _model_cfg(ctx)
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    replicas = int(ctx.config.extra.get("replicas", 2))
+    cfg, model, params = _served_model(ctx)
+    replicas_cfg = ctx.config.extra.get("replicas", 2)
+    if replicas_cfg == "auto":
+        # one replica per granted mesh device: a fleet-arbitrated grant
+        # change then genuinely changes serving capacity on re-instantiation
+        replicas = max(1, int(ctx.mesh.devices.size)
+                       if ctx.mesh is not None else 1)
+    else:
+        replicas = int(replicas_cfg)
     slots = int(ctx.config.extra.get("slots", 2))
     max_seq = int(ctx.config.extra.get("max_seq", 128))
     chunk_tokens = int(ctx.config.extra.get("chunk_tokens", 0))
     prefix_cache_mb = float(ctx.config.extra.get("prefix_cache_mb", 0))
     prefix_cache = None
-    if chunk_tokens and prefix_cache_mb > 0:
+    shared = ctx.config.extra.get("shared_prefix_cache")
+    if shared is not None and chunk_tokens \
+            and getattr(shared, "chunk", None) == chunk_tokens:
+        # fleet-shared cache (FleetArbiter): VREs serving the same arch
+        # warm each other's prompt heads; entries are host-side, so the
+        # cache outlives any one VRE's placement
+        prefix_cache = shared
+    elif chunk_tokens and prefix_cache_mb > 0:
         prefix_cache = PrefixCache(chunk_tokens,
                                    budget_bytes=int(prefix_cache_mb * 2**20),
                                    monitor=ctx.monitor)
 
+    slots_per_device = ctx.config.extra.get("slots_per_device")
+
     def factory(i: int, devices=None) -> ServingEngine:
-        return ServingEngine(model, params, slots=slots, max_seq=max_seq,
-                             name=f"replica{i}", monitor=ctx.monitor,
-                             devices=devices, chunk_tokens=chunk_tokens,
+        eng_slots, eng_devices = slots, devices
+        if slots_per_device and devices:
+            # granted devices buy KV-cache capacity: decode slots scale
+            # with the replica's slice (aggregate HBM holds that many
+            # concurrent sequences). Compute commits to the slice's lead
+            # device — intra-replica sharding is a separate road-map item,
+            # and *replicating* compute across the slice would burn the
+            # very capacity the grant added.
+            eng_slots = int(slots_per_device) * len(devices)
+            eng_devices = tuple(devices[:1])
+        return ServingEngine(model, params, slots=eng_slots,
+                             max_seq=max_seq, name=f"replica{i}",
+                             monitor=ctx.monitor, devices=eng_devices,
+                             chunk_tokens=chunk_tokens,
                              prefix_cache=prefix_cache)
 
     # the ReplicaSet partitions the VRE mesh into disjoint per-replica

@@ -50,8 +50,14 @@ class VREConfig:
 
     def fingerprint(self) -> str:
         import hashlib
-        blob = json.dumps(dataclasses.asdict(self), sort_keys=True,
-                          default=str)
+        # shallow field walk, not dataclasses.asdict: extra may hold live
+        # objects (e.g. a fleet-shared PrefixCache), which asdict would
+        # deepcopy (locks don't pickle); hash them by type so the
+        # fingerprint stays deterministic across processes
+        blob = json.dumps(
+            {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)},
+            sort_keys=True, default=lambda o: f"<{type(o).__name__}>")
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
@@ -87,11 +93,21 @@ class VirtualResearchEnvironment:
             str(Path(config.workdir) / "image_cache"))
         self.last_report: Optional[DeploymentReport] = None
         self.pending_resize: Optional[tuple] = None
+        # fleet arbitration: when a FleetArbiter admits this VRE it grants a
+        # disjoint slice of the shared pool (device_pool) and routes resize
+        # requests through its proposal protocol (arbiter)
+        self.device_pool: Optional[list] = None
+        self.arbiter = None
+        self.claim = None
+        # bumped every (re-)instantiation; endpoint addresses carry it so a
+        # TTL'd directory can tell a fresh placement from a stale lease
+        self.generation = 0
 
     # -- infrastructure layer ---------------------------------------------
     def _procure_mesh(self) -> Mesh:
         n = int(np.prod(self.config.mesh_shape))
-        devices = jax.devices()
+        devices = (self.device_pool if self.device_pool is not None
+                   else jax.devices())
         if len(devices) < n:
             raise RuntimeError(
                 f"provider has {len(devices)} devices, VRE wants {n}")
@@ -106,6 +122,7 @@ class VirtualResearchEnvironment:
             return self.last_report
         t0 = time.perf_counter()
         self.mesh = self._procure_mesh()
+        self.generation += 1
         ctx = VREContext(self)
         deployer = deployer or DecentralizedDeployer(self.image_cache)
 
@@ -123,7 +140,8 @@ class VirtualResearchEnvironment:
                     instance = spec.builder(ctx)
                     hits += self.image_cache.hits - h0
                     misses += self.image_cache.misses - m0
-                    ep = f"vre://{self.config.name}/{spec.name}"
+                    ep = (f"vre://{self.config.name}/{spec.name}"
+                          f"@g{self.generation}")
                     self.services[spec.name] = Service(
                         spec.name, spec.kind, instance, ep,
                         spec.long_running)
@@ -153,6 +171,9 @@ class VirtualResearchEnvironment:
         return {
             "name": self.config.name,
             "state": self.state,
+            "generation": self.generation,
+            "granted_devices": len(self.device_pool)
+                               if self.device_pool is not None else None,
             "mesh": list(self.config.mesh_shape) if self.mesh is not None
                     else None,
             "pending_resize": list(self.pending_resize)
@@ -176,10 +197,19 @@ class VirtualResearchEnvironment:
         """Mark the mesh as saturated (autoscaler hook). ``resize`` is
         destructive — it checkpoints and re-instantiates — so the request is
         recorded for the driver to apply at a safe point rather than ripping
-        services out from under in-flight work."""
+        services out from under in-flight work.
+
+        Under a FleetArbiter the request becomes a *proposal*: the arbiter
+        may grant it fully, grant a shrunken shape against competing claims,
+        or defer it until capacity frees up — it sets ``pending_resize`` (and
+        the device grant) itself. Returns the proposal verdict dict in that
+        case, the recorded pending shape otherwise."""
         if new_mesh_shape is None:
             d, *rest = self.config.mesh_shape
             new_mesh_shape = (d * 2, *rest)
+        if self.arbiter is not None:
+            return self.arbiter.propose_resize(self.config.name,
+                                               tuple(new_mesh_shape))
         self.pending_resize = tuple(new_mesh_shape)
         self.monitor.log("vre", "resize_requested",
                          old=list(self.config.mesh_shape),

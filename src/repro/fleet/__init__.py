@@ -1,0 +1,1 @@
+from repro.fleet.arbiter import FleetArbiter, ResourceClaim  # noqa: F401

@@ -54,6 +54,36 @@ def poisson_load(submit, prompts: List[np.ndarray], rate_rps: float, rng,
     return out
 
 
+def merged_poisson_load(streams, rng, max_new_tokens: int = 12) -> dict:
+    """Multi-tenant open-loop load: each stream is ``(name, submit, prompts,
+    rate_rps)``; arrivals are sampled per stream and merged into one
+    time-ordered schedule, so tenants' requests interleave the way
+    concurrent communities' traffic actually would (a hot tenant does not
+    get to finish before a cold one starts). Returns name -> [Request].
+
+    Pacing is coarse-grained: gaps below ~20ms are submitted back-to-back
+    instead of slept. With busy decode threads holding the GIL, every
+    ``time.sleep`` overshoots by tens of milliseconds, and at saturating
+    rates that per-submission tax (not the load) would dominate measured
+    walls."""
+    schedule = []
+    for name, submit, prompts, rate in streams:
+        gaps = rng.exponential(1.0 / rate, size=len(prompts)) \
+            if rate > 0 else np.zeros(len(prompts))
+        arrivals = np.cumsum(gaps)
+        for p, at in zip(prompts, arrivals):
+            schedule.append((float(at), name, submit, p))
+    schedule.sort(key=lambda s: s[0])
+    out = {name: [] for name, *_ in streams}
+    t0 = time.perf_counter()
+    for at, name, submit, p in schedule:
+        delay = t0 + at - time.perf_counter()
+        if delay > 0.02:
+            time.sleep(delay)
+        out[name].append(submit(p, max_new_tokens=max_new_tokens))
+    return out
+
+
 def _percentile(vals: List[float], q: float) -> Optional[float]:
     if not vals:
         return None
@@ -97,6 +127,7 @@ def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
         "prefills": counter("prefills"),
         "prefill_requests": counter("prefill_requests"),
         "prefill_chunks": counter("prefill_chunks"),
+        "prefill_chunk_batches": counter("prefill_chunk_batches"),
         "prefill_tokens": counter("prefill_tokens"),
         "prefix_hit_tokens": counter("prefix_hit_tokens"),
         "decode_steps": counter("decode_steps"),
@@ -224,6 +255,34 @@ def run_elastic_serve(vre, *, waves: int = 2, requests_per_wave: int = 16,
     }
 
 
+def validate_serving_args(args, error, zero_disables: bool = False) -> None:
+    """Reject malformed serving knobs with a one-line error instead of a
+    deep jax/engine traceback: a negative or zero chunk size would reach the
+    engine as a "truthy" chunk config and explode inside jitted slicing; a
+    negative cache budget would quietly evict everything.
+
+    ``zero_disables`` is for subcommands whose defaults are
+    enabled-by-default (``fleet``): there 0 is the explicit off switch, so
+    only negatives are malformed — "omit the flag" would send the user in
+    a circle back to the default."""
+    off = "pass 0" if zero_disables else "omit the flag"
+    bad_chunk = (lambda v: v < 0) if zero_disables else (lambda v: v <= 0)
+    if args.chunk_tokens is not None and bad_chunk(args.chunk_tokens):
+        error(f"--chunk-tokens must be a positive integer, got "
+              f"{args.chunk_tokens} ({off} to disable chunked prefill)")
+    if args.prefix_cache_mb is not None and bad_chunk(args.prefix_cache_mb):
+        error(f"--prefix-cache-mb must be positive, got "
+              f"{args.prefix_cache_mb} ({off} to disable the prefix cache)")
+    if args.prefix_cache_mb and args.chunk_tokens is not None \
+            and not args.chunk_tokens:
+        error("--prefix-cache-mb requires chunked prefill "
+              "(prefix entries live at chunk boundaries)")
+    if args.prefix_cache_mb and args.chunk_tokens is None \
+            and not zero_disables:
+        error("--prefix-cache-mb requires --chunk-tokens "
+              "(prefix entries live at chunk boundaries)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
@@ -234,19 +293,19 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="open-loop Poisson arrival rate (req/s)")
-    ap.add_argument("--chunk-tokens", type=int, default=0,
+    ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="chunk-wise prefill in pieces of this many tokens "
-                         "(0 disables; required for prefix caching)")
-    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                         "(omit to disable; required for prefix caching)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=None,
                     help="cross-request prefix-cache LRU budget in MiB "
-                         "(0 disables)")
+                         "(omit to disable)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prompts share a prefix head of this many tokens "
                          "(0: independent prompts)")
     args = ap.parse_args(argv)
-    if args.prefix_cache_mb and not args.chunk_tokens:
-        ap.error("--prefix-cache-mb requires --chunk-tokens "
-                 "(prefix entries live at chunk boundaries)")
+    validate_serving_args(args, ap.error)
+    args.chunk_tokens = args.chunk_tokens or 0
+    args.prefix_cache_mb = args.prefix_cache_mb or 0.0
 
     monitor = Monitor()
     rs = build_replicaset(args.arch, replicas=args.replicas,

@@ -106,10 +106,25 @@ class Autoscaler:
             if self.resize_mesh is not None and not self._resize_requested:
                 # fire once per saturation episode — the resize is applied
                 # by the driver at a safe point, so re-firing every tick
-                # until then would only spam the event log
-                self.resize_mesh()
+                # until then would only spam the event log. Under a
+                # FleetArbiter the call is a *proposal* that may come back
+                # granted, shrunk, or deferred — a deferred proposal is
+                # parked with the arbiter (re-evaluated as capacity frees),
+                # so it still counts as this episode's request.
+                verdict = self.resize_mesh()
                 self._resize_requested = True
                 self._last_action_t = now
+                if isinstance(verdict, dict) and "verdict" in verdict:
+                    self.monitor.log(self.rs.name, "resize_proposal",
+                                     verdict=verdict["verdict"],
+                                     devices=verdict.get("devices"))
+                    if verdict["verdict"] == "noop":
+                        # quota/max capped: nothing was reserved and
+                        # re-proposing every tick can't change the answer
+                        # until the claim does — keep the episode burned
+                        # (it resets when load drops or on notify_resized)
+                        # and report hold, since no resize is coming
+                        return self._record("hold", sig)
                 return self._record("resize", sig)
             return self._record("hold", sig)
         self._resize_requested = False       # saturation episode over

@@ -136,7 +136,8 @@ class ServingEngine:
         self.metrics = {"requests": 0, "tokens": 0, "prefills": 0,
                         "prefill_requests": 0, "decode_steps": 0,
                         "completed": 0, "prefill_chunks": 0,
-                        "prefill_tokens": 0, "prefix_hit_tokens": 0}
+                        "prefill_tokens": 0, "prefix_hit_tokens": 0,
+                        "prefill_chunk_batches": 0}
         # jitted prefill/decode are shared across all engines with the same
         # (model, slots, max_seq): replicas and failover respawns then reuse
         # one compile instead of paying it per replica. Prefill is jitted
@@ -182,6 +183,24 @@ class ServingEngine:
                         cache, new_sl)
                 jit_cache[ckey] = jax.jit(chunk_fn)
             self._chunk = jit_cache[ckey]
+            # batched variant: when several slots are mid-chunking, gather
+            # each one's cache slice into a batch row and advance them all
+            # in ONE call instead of one batch-1 dispatch per slot. Rides
+            # on the same padding-safe gate as chunking itself (per-row
+            # pos0/positions are exact for all-global attention); rows are
+            # padded to `slots` so the compile is shape-stable — pad rows
+            # duplicate row 0, whose identical scatter writes are benign.
+            bkey = (slots, max_seq, self.chunk_tokens, "chunk_batched")
+            if bkey not in jit_cache:
+                def chunk_batch_fn(p, cache, toks, pos0s, slots_arr):
+                    sl = jax.tree.map(
+                        lambda x: jnp.take(x, slots_arr, axis=1), cache)
+                    _, new_sl = model.prefill_chunk(p, sl, toks, pos0s)
+                    return jax.tree.map(
+                        lambda full, s: full.at[:, slots_arr].set(s),
+                        cache, new_sl)
+                jit_cache[bkey] = jax.jit(chunk_batch_fn)
+            self._chunk_batched = jit_cache[bkey]
             # prefix-cache restore/extract with a *traced* slot index: a
             # plain eager cache.at[:, slot, :L].set() bakes the slot in as
             # a constant and recompiles per slot, which showed up as ~200ms
@@ -350,8 +369,15 @@ class ServingEngine:
     def _prefill_step(self):
         """Advance every chunk-prefilling slot by one chunk. Runs before the
         fused decode step, so long prompts trickle in between decode steps
-        instead of stalling already-admitted requests."""
-        for slot, start in list(self._prefilling.items()):
+        instead of stalling already-admitted requests. Two or more
+        concurrent chunking slots advance in a single batched call; a lone
+        slot keeps the batch-1 kernel (padding it to ``slots`` rows would
+        multiply its compute for nothing)."""
+        items = list(self._prefilling.items())
+        if len(items) >= 2:
+            self._prefill_chunks_batched(items)
+            return
+        for slot, start in items:
             r = self.active[slot]
             plen = len(r.tokens)
             c = self.chunk_tokens
@@ -372,22 +398,69 @@ class ServingEngine:
                     self.monitor.log(self.name, "prefill_error",
                                      error=repr(exc), requests=1)
                 continue
-            self.metrics["prefill_chunks"] += 1
-            self.metrics["prefill_tokens"] += end - start
-            if self.prefix_cache is not None and end % c == 0 \
-                    and not self.prefix_cache.contains(r.tokens[:end]):
-                # the cache stores per-chunk slices: offer only this
-                # chunk's [end-c, end) positions (the trie chain supplies
-                # the rest on restore)
-                entry = self._pc_extract(self.cache, np.int32(slot),
-                                         np.int32(end - c), c)
-                self.prefix_cache.insert(r.tokens[:end], entry)
-            if end >= plen:
-                del self._prefilling[slot]
-                self.pos[slot] = plen - 1       # ready for decode
-                self.metrics["prefill_requests"] += 1
-            else:
-                self._prefilling[slot] = end
+            self._after_chunk(slot, start, end, r)
+
+    def _prefill_chunks_batched(self, items):
+        """One engine call advances every chunk-prefilling slot: rows gather
+        the per-slot cache slices, run the chunk with per-row pos0, and
+        scatter back. Rows are padded to ``slots`` by duplicating row 0 (the
+        duplicate writes the same values to the same slot — benign), so the
+        call compiles once regardless of how many slots are chunking."""
+        c = self.chunk_tokens
+        toks = np.zeros((self.slots, c), np.int32)
+        pos0 = np.zeros((self.slots,), np.int32)
+        slot_idx = np.zeros((self.slots,), np.int32)
+        rows = []
+        for j, (slot, start) in enumerate(items):
+            r = self.active[slot]
+            end = min(start + c, len(r.tokens))
+            toks[j, :end - start] = r.tokens[start:end]
+            pos0[j] = start
+            slot_idx[j] = slot
+            rows.append((slot, start, end, r))
+        toks[len(items):] = toks[0]
+        pos0[len(items):] = pos0[0]
+        slot_idx[len(items):] = slot_idx[0]
+        try:
+            self.cache = self._chunk_batched(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos0), jnp.asarray(slot_idx))
+        except Exception as exc:
+            # the batch failed as a unit: every participating request fails
+            for slot, _start, _end, r in rows:
+                self._prefilling.pop(slot, None)
+                self.active[slot] = None
+                self.pos[slot] = -1
+                if not r.future.done():
+                    r.future.set_exception(exc)
+            if self.monitor is not None:
+                self.monitor.log(self.name, "prefill_error",
+                                 error=repr(exc), requests=len(rows))
+            return
+        self.metrics["prefill_chunk_batches"] += 1
+        for slot, start, end, r in rows:
+            self._after_chunk(slot, start, end, r)
+
+    def _after_chunk(self, slot: int, start: int, end: int, r: Request):
+        """Shared post-chunk bookkeeping: metrics, prefix-cache insertion at
+        chunk boundaries, and the prefilling -> decoding transition."""
+        c = self.chunk_tokens
+        self.metrics["prefill_chunks"] += 1
+        self.metrics["prefill_tokens"] += end - start
+        if self.prefix_cache is not None and end % c == 0 \
+                and not self.prefix_cache.contains(r.tokens[:end]):
+            # the cache stores per-chunk slices: offer only this
+            # chunk's [end-c, end) positions (the trie chain supplies
+            # the rest on restore)
+            entry = self._pc_extract(self.cache, np.int32(slot),
+                                     np.int32(end - c), c)
+            self.prefix_cache.insert(r.tokens[:end], entry)
+        if end >= len(r.tokens):
+            del self._prefilling[slot]
+            self.pos[slot] = len(r.tokens) - 1       # ready for decode
+            self.metrics["prefill_requests"] += 1
+        else:
+            self._prefilling[slot] = end
 
     @property
     def prefill_backlog(self) -> int:

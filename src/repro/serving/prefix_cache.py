@@ -245,7 +245,9 @@ class PrefixCache:
         they stay valid across placement changes; a chunk-size mismatch
         makes boundaries incoherent, so everything is dropped instead.
         Returns the number of entries adopted."""
-        if other is None or other.chunk != self.chunk:
+        if other is None or other is self or other.chunk != self.chunk:
+            # `other is self`: a fleet-shared cache carried across a resize
+            # adopts from itself — nothing to copy
             return 0
         with other._lock:
             items = [(key, node.entry) for key, node in other._lru.items()

@@ -317,3 +317,54 @@ def test_rolling_cache_model_declines_chunking():
     assert eng.metrics["prefill_chunks"] == 0
     ref = greedy_generate(model, params, p, 4, 96)
     np.testing.assert_array_equal(f.result(), ref)
+
+
+# -- batched multi-slot chunk prefill ----------------------------------------
+
+def test_batched_chunks_across_slots_oracle_exact(served_model):
+    """Several slots chunk-prefilling concurrently advance in ONE batched
+    engine call per step (not one batch-1 dispatch per slot) and stay
+    token-identical to the stepwise oracle — including heterogeneous
+    prompt lengths, so rows sit at different chunk offsets."""
+    cfg, model, params = served_model
+    eng = _engine(model, params, slots=4)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n)
+               for n in (40, 55, 33, 47)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["prefill_chunk_batches"] > 0
+    # every prompt token entered the cache exactly once
+    assert eng.metrics["prefill_tokens"] == sum(len(p) for p in prompts)
+
+
+def test_single_prefilling_slot_keeps_batch1_kernel(served_model):
+    """A lone chunk-prefilling slot must keep the batch-1 chunk call:
+    padding it to ``slots`` rows would multiply its compute for nothing."""
+    cfg, model, params = served_model
+    eng = _engine(model, params, slots=4)
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(1, cfg.vocab_size, size=50)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["prefill_chunks"] > 0
+    assert eng.metrics["prefill_chunk_batches"] == 0
+
+
+def test_batched_chunks_feed_prefix_cache(served_model):
+    """Chunk-boundary prefix-cache insertion works identically through the
+    batched path: a later request sharing the head restores it and stays
+    oracle-exact."""
+    cfg, model, params = served_model
+    pc = PrefixCache(CHUNK, budget_bytes=8 << 20)
+    eng = _engine(model, params, slots=4, prefix_cache=pc)
+    rng = np.random.default_rng(23)
+    head = rng.integers(1, cfg.vocab_size, size=2 * CHUNK)
+    prompts = [np.concatenate([head, rng.integers(1, cfg.vocab_size,
+                                                  size=k)])
+               for k in (5, 9, 7)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["prefill_chunk_batches"] > 0
+    assert pc.stats()["insertions"] >= 2          # both head boundaries
+    late = np.concatenate([head, rng.integers(1, cfg.vocab_size, size=6)])
+    before = eng.metrics["prefix_hit_tokens"]
+    _check_oracle(model, params, eng, [late])
+    assert eng.metrics["prefix_hit_tokens"] - before >= 2 * CHUNK

@@ -1,0 +1,73 @@
+"""``cli serve`` / serving-driver argument validation: malformed knobs get
+a one-line error instead of a deep jax traceback."""
+import json
+
+import pytest
+
+from repro import cli
+from repro.launch import serve as serve_mod
+
+
+def _serve_dir(tmp_path):
+    d = tmp_path / "dep"
+    d.mkdir()
+    (d / "vre.json").write_text(json.dumps({
+        "name": "t", "provider": "cpu", "mesh_shape": [1, 1],
+        "mesh_axes": ["data", "model"], "arch": "yi-9b", "services": []}))
+    return str(d)
+
+
+@pytest.mark.parametrize("flags", [
+    ["--chunk-tokens", "0"],
+    ["--chunk-tokens", "-4"],
+    ["--prefix-cache-mb", "0"],
+    ["--prefix-cache-mb", "-1.5"],
+    ["--prefix-cache-mb", "8"],              # requires --chunk-tokens
+])
+def test_cli_serve_rejects_malformed_serving_knobs(tmp_path, capsys, flags):
+    d = _serve_dir(tmp_path)
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["serve", "--dir", d] + flags)
+    # sys.exit(message) -> code is the message string; argparse-style -> 2.
+    # Either way the process fails before touching jax, with a clear line.
+    assert exc.value.code not in (0, None)
+    msg = str(exc.value.code) + capsys.readouterr().err
+    assert "chunk-tokens" in msg or "prefix-cache-mb" in msg
+
+
+@pytest.mark.parametrize("argv", [
+    ["--chunk-tokens", "0"],
+    ["--chunk-tokens", "-2"],
+    ["--prefix-cache-mb", "-3"],
+    ["--prefix-cache-mb", "4"],
+])
+def test_serve_driver_rejects_malformed_serving_knobs(capsys, argv):
+    with pytest.raises(SystemExit) as exc:
+        serve_mod.main(argv)
+    assert exc.value.code not in (0, None)
+    err = capsys.readouterr().err
+    assert "chunk-tokens" in err or "prefix-cache-mb" in err
+
+
+def test_cli_fleet_rejects_malformed_knobs():
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["fleet", "--chunk-tokens", "-1"])
+    assert "chunk-tokens" in str(exc.value.code)
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["fleet", "--prefix-cache-mb", "-2"])
+    assert "prefix-cache-mb" in str(exc.value.code)
+
+
+def test_validate_serving_args_accepts_valid_and_disabled():
+    class A:
+        chunk_tokens = None
+        prefix_cache_mb = None
+    errors = []
+    serve_mod.validate_serving_args(A(), errors.append)
+    assert errors == []
+
+    class B:
+        chunk_tokens = 16
+        prefix_cache_mb = 32.0
+    serve_mod.validate_serving_args(B(), errors.append)
+    assert errors == []

@@ -218,3 +218,75 @@ def test_stop_fails_queued_futures_on_never_started_pool(served_model):
         assert r.future.done()
         with pytest.raises(RuntimeError):
             r.future.result(timeout=0)
+
+
+# -- oversubscribed partitioning + rebalance disjointness (satellites) -------
+
+def test_partition_devices_oversubscribed_round_robin():
+    """More replicas than devices: every replica gets exactly one device,
+    reuse is round-robin (max/min assignment counts differ by at most 1),
+    and pool order is preserved."""
+    devs = list("abc")
+    for n in (4, 5, 7, 9):
+        slices = partition_devices(devs, n)
+        assert len(slices) == n
+        assert all(len(s) == 1 for s in slices)
+        counts = {d: 0 for d in devs}
+        for (d,) in slices:
+            counts[d] += 1
+        assert max(counts.values()) - min(counts.values()) <= 1, (n, counts)
+        assert [s[0] for s in slices[:3]] == devs          # stable order
+    # 1 device, many replicas: everyone shares it
+    assert partition_devices(["x"], 3) == [("x",), ("x",), ("x",)]
+
+
+def test_partition_devices_exhaustive_disjoint_cover():
+    """For every replica count up to the pool size: slices are pairwise
+    disjoint, non-empty, and exactly cover the pool."""
+    devs = list(range(7))
+    for n in range(1, 8):
+        slices = partition_devices(devs, n)
+        flat = [d for s in slices for d in s]
+        assert sorted(flat) == devs, (n, slices)           # cover, no dup
+        assert all(s for s in slices)
+
+
+def test_repeated_rebalance_keeps_slices_disjoint():
+    """Slice disjointness is an invariant of the pool, not a property of
+    the first partition: repeated rebalances (same mesh and a grown one)
+    must re-slice without ever overlapping replicas."""
+    out = run_devices("""
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.launch.serve import build_replicaset
+
+        def check(rs, pool_size):
+            sets = [set(v) for v in rs.placements().values()]
+            assert all(sets), sets
+            for i in range(len(sets)):
+                for j in range(i + 1, len(sets)):
+                    assert sets[i].isdisjoint(sets[j]), (i, j, sets)
+            assert len(set().union(*sets)) == pool_size
+
+        mesh4 = Mesh(np.array(jax.devices()[:4]).reshape(4, 1),
+                     ("data", "model"))
+        rs = build_replicaset("yi-9b", replicas=2, slots=2, max_seq=64,
+                              mesh=mesh4)
+        rs.start()
+        try:
+            check(rs, 4)
+            for _ in range(3):                     # same-mesh rebalances
+                rs.rebalance()
+                check(rs, 4)
+            mesh8 = Mesh(np.array(jax.devices()).reshape(8, 1),
+                         ("data", "model"))
+            rs.rebalance(mesh8)                    # grown pool
+            check(rs, 8)
+            rs.rebalance(mesh8, replicas=3)        # and a replica change
+            check(rs, 8)
+            assert rs.metrics()["rebalances"] == 5
+        finally:
+            rs.stop()
+        print("OK")
+    """, n_devices=8)
+    assert "OK" in out

@@ -1,0 +1,221 @@
+"""Perf-history dashboard: render a pile of CI bench artifacts into one page.
+
+The bench-smoke lane uploads a SHA/timestamp-stamped ``bench_serving.json``
+per run (see ``bench_serving._stamp``); download a batch of those artifacts
+into a directory and this tool turns them into a static trend page — one
+section per metric with an inline SVG sparkline, the latest value, and the
+full (timestamp, sha, value) series — plus a markdown variant for PRs.
+
+    python benchmarks/report_history.py --dir artifacts/ \
+        --out-html bench_history.html --out-md bench_history.md
+
+Stdlib only (the artifacts are plain JSON): it runs anywhere, including the
+CI job itself and a laptop with a pile of ``gh run download`` outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def flatten_metrics(node, prefix: str = "") -> Dict[str, float]:
+    """Dotted-path -> value for every numeric scalar in a report (the same
+    path scheme ``ci_baseline.json`` gates on). Bools/strings/lists are
+    skipped — trends only make sense for numbers."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten_metrics(v, f"{prefix}{k}."))
+        return out
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        return out                  # None/strings/lists: no trend to plot
+    out[prefix[:-1]] = float(node)
+    return out
+
+
+def load_artifacts(directory: str) -> List[dict]:
+    """Parse every ``*.json`` under ``directory`` (recursively — downloaded
+    artifacts usually arrive one-per-subdirectory) into
+    ``{"path", "timestamp", "sha", "run_id", "metrics"}`` records, sorted by
+    timestamp. Unparseable files are skipped with a warning; artifacts
+    missing the ``meta`` stamp fall back to file mtime and stay usable."""
+    runs = []
+    for root, _dirs, files in os.walk(directory):
+        for fn in sorted(files):
+            if not fn.endswith(".json"):
+                continue
+            path = os.path.join(root, fn)
+            try:
+                with open(path) as f:
+                    report = json.load(f)
+            except (OSError, ValueError) as exc:
+                print(f"skipping {path}: {exc}", file=sys.stderr)
+                continue
+            if not isinstance(report, dict):
+                print(f"skipping {path}: not a report object",
+                      file=sys.stderr)
+                continue
+            meta = report.get("meta") or {}
+            ts = meta.get("timestamp")
+            if not ts:
+                import datetime
+                ts = datetime.datetime.utcfromtimestamp(
+                    os.path.getmtime(path)).strftime("%Y-%m-%dT%H:%M:%SZ")
+            runs.append({
+                "path": path,
+                "timestamp": ts,
+                "sha": (meta.get("git_sha") or "")[:10],
+                "run_id": meta.get("run_id"),
+                "metrics": flatten_metrics(report),
+            })
+    runs.sort(key=lambda r: r["timestamp"])
+    return runs
+
+
+def metric_series(runs: List[dict],
+                  metrics: Optional[List[str]] = None
+                  ) -> Dict[str, List[Tuple[dict, float]]]:
+    """metric -> [(run, value), ...] in run (timestamp) order. ``metrics``
+    restricts/orders the selection; the default is every metric any run
+    reports, alphabetically — a metric a run lacks simply has a gap."""
+    names = metrics
+    if names is None:
+        seen = set()
+        for r in runs:
+            seen.update(r["metrics"])
+        names = sorted(seen)
+    out = {}
+    for name in names:
+        series = [(r, r["metrics"][name]) for r in runs
+                  if name in r["metrics"]]
+        if series:
+            out[name] = series
+    return out
+
+
+def sparkline_svg(values: List[float], width: int = 240,
+                  height: int = 48, pad: int = 4) -> str:
+    """Inline SVG polyline over the series (last point marked). A flat
+    series renders as a centered horizontal line."""
+    if len(values) == 1:
+        values = values * 2
+    lo, hi = min(values), max(values)
+    span = (hi - lo) or 1.0
+    n = len(values)
+    pts = []
+    for i, v in enumerate(values):
+        x = pad + (width - 2 * pad) * (i / (n - 1))
+        y = height - pad - (height - 2 * pad) * ((v - lo) / span)
+        pts.append(f"{x:.1f},{y:.1f}")
+    lx, ly = pts[-1].split(",")
+    return (
+        f'<svg width="{width}" height="{height}" role="img">'
+        f'<polyline fill="none" stroke="#2a6fb0" stroke-width="1.5" '
+        f'points="{" ".join(pts)}"/>'
+        f'<circle cx="{lx}" cy="{ly}" r="2.5" fill="#2a6fb0"/>'
+        f'</svg>')
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def render_markdown(runs: List[dict],
+                    metrics: Optional[List[str]] = None) -> str:
+    series = metric_series(runs, metrics)
+    lines = ["# Bench history", "",
+             f"{len(runs)} runs, {len(series)} metrics "
+             f"({runs[0]['timestamp']} → {runs[-1]['timestamp']})" if runs
+             else "no runs found", ""]
+    for name, pts in series.items():
+        vals = [v for _r, v in pts]
+        first, last = vals[0], vals[-1]
+        delta = (last - first) / abs(first) * 100 if first else 0.0
+        lines += [f"## `{name}`", "",
+                  f"latest **{_fmt(last)}** · min {_fmt(min(vals))} · "
+                  f"max {_fmt(max(vals))} · {delta:+.1f}% since first run",
+                  "", "| timestamp | sha | value |", "| --- | --- | --- |"]
+        lines += [f"| {r['timestamp']} | {r['sha'] or '—'} | {_fmt(v)} |"
+                  for r, v in pts]
+        lines.append("")
+    return "\n".join(lines)
+
+
+def render_html(runs: List[dict],
+                metrics: Optional[List[str]] = None) -> str:
+    series = metric_series(runs, metrics)
+    head = (
+        "<!doctype html><html><head><meta charset='utf-8'>"
+        "<title>Bench history</title><style>"
+        "body{font-family:system-ui,sans-serif;margin:2rem;color:#222}"
+        "section{margin-bottom:1.5rem;border-bottom:1px solid #eee;"
+        "padding-bottom:1rem}"
+        "table{border-collapse:collapse;font-size:0.85rem}"
+        "td,th{padding:2px 10px;text-align:left;border-bottom:1px solid #eee}"
+        "code{background:#f5f5f5;padding:1px 4px}"
+        ".stats{color:#666;font-size:0.9rem}"
+        "details>summary{cursor:pointer;color:#2a6fb0}"
+        "</style></head><body>")
+    parts = [head, "<h1>Bench history</h1>"]
+    if runs:
+        parts.append(f"<p class='stats'>{len(runs)} runs · "
+                     f"{html.escape(runs[0]['timestamp'])} → "
+                     f"{html.escape(runs[-1]['timestamp'])}</p>")
+    for name, pts in series.items():
+        vals = [v for _r, v in pts]
+        rows = "".join(
+            f"<tr><td>{html.escape(r['timestamp'])}</td>"
+            f"<td><code>{html.escape(r['sha'] or '—')}</code></td>"
+            f"<td>{_fmt(v)}</td></tr>" for r, v in pts)
+        parts.append(
+            f"<section><h2><code>{html.escape(name)}</code></h2>"
+            f"{sparkline_svg(vals)}"
+            f"<p class='stats'>latest <b>{_fmt(vals[-1])}</b> · "
+            f"min {_fmt(min(vals))} · max {_fmt(max(vals))} · "
+            f"{len(vals)} points</p>"
+            f"<details><summary>series</summary><table>"
+            f"<tr><th>timestamp</th><th>sha</th><th>value</th></tr>"
+            f"{rows}</table></details></section>")
+    parts.append("</body></html>")
+    return "".join(parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", required=True,
+                    help="directory of downloaded bench report JSONs "
+                         "(searched recursively)")
+    ap.add_argument("--out-html", default=None,
+                    help="write the HTML trend page here")
+    ap.add_argument("--out-md", default=None,
+                    help="write the markdown trend page here")
+    ap.add_argument("--metrics", default=None,
+                    help="comma-separated dotted metric paths to render "
+                         "(default: every numeric metric found)")
+    args = ap.parse_args(argv)
+    runs = load_artifacts(args.dir)
+    if not runs:
+        print(f"no report JSONs found under {args.dir}", file=sys.stderr)
+        return 1
+    metrics = [m.strip() for m in args.metrics.split(",") if m.strip()] \
+        if args.metrics else None
+    if not args.out_html and not args.out_md:
+        print(render_markdown(runs, metrics))
+        return 0
+    if args.out_html:
+        with open(args.out_html, "w") as f:
+            f.write(render_html(runs, metrics))
+        print(f"wrote {args.out_html} ({len(runs)} runs)", file=sys.stderr)
+    if args.out_md:
+        with open(args.out_md, "w") as f:
+            f.write(render_markdown(runs, metrics))
+        print(f"wrote {args.out_md} ({len(runs)} runs)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

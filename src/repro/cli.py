@@ -107,6 +107,7 @@ def cmd_serve(args):
     validate_serving_args(args, lambda msg: sys.exit(f"serve: {msg}"))
     args.chunk_tokens = args.chunk_tokens or 0
     args.prefix_cache_mb = args.prefix_cache_mb or 0.0
+    args.speculate = args.speculate or 0
     d = Path(args.dir)
     vre, _ = _load_vre(d)
     if "lm-server" not in vre.config.services:
@@ -117,6 +118,9 @@ def cmd_serve(args):
         vre.config.extra["chunk_tokens"] = args.chunk_tokens
     if args.prefix_cache_mb:
         vre.config.extra["prefix_cache_mb"] = args.prefix_cache_mb
+    if args.speculate:
+        vre.config.extra["speculate"] = args.speculate
+        vre.config.extra["draft"] = args.draft or "ngram"
     vre.instantiate()
     try:
         rng = np.random.default_rng(args.seed)
@@ -150,6 +154,9 @@ def cmd_fleet(args):
 
     validate_serving_args(args, lambda msg: sys.exit(f"fleet: {msg}"),
                           zero_disables=True)
+    if args.tick_interval is not None and args.tick_interval < 0:
+        sys.exit(f"fleet: --tick-interval must be >= 0 (0 disables the "
+                 f"background ticker), got {args.tick_interval}")
     # fleet knobs are enabled by default (None -> scenario defaults);
     # an explicit 0 disables — chunking off forces the cache off too,
     # since prefix entries live at chunk boundaries
@@ -162,12 +169,14 @@ def cmd_fleet(args):
         sys.exit(f"fleet: {args.vres} VREs need >= {args.vres} devices, "
                  f"provider has {len(jax.devices())}; set XLA_FLAGS="
                  f"--xla_force_host_platform_device_count=N for a dry-run")
+    tick_interval = 0.05 if args.tick_interval is None else args.tick_interval
     report = run_fleet_scenario(
         args.vres, arch=args.arch, workdir=args.workdir,
         requests_per_phase=args.requests, rate_rps=args.rate,
         max_new_tokens=args.max_new, chunk_tokens=chunk_tokens,
         prefix_cache_mb=prefix_cache_mb,
         shared_prefix_len=args.shared_prefix, static=args.static,
+        tick_interval_s=tick_interval or None,
         rng=np.random.default_rng(args.seed))
     print(json.dumps(report, indent=2))
     return report
@@ -220,6 +229,14 @@ def main(argv=None):
     p.add_argument("--prefix-cache-mb", type=float, default=None,
                    help="cross-request prefix-cache LRU budget in MiB "
                         "(requires --chunk-tokens; omit to disable)")
+    p.add_argument("--speculate", type=int, default=None,
+                   help="speculative decoding: draft tokens verified per "
+                        "decode step (omit to disable; rolling/SSM archs "
+                        "fall back to plain decode)")
+    p.add_argument("--draft", choices=("model", "ngram"), default=None,
+                   help="draft engine for --speculate: 'ngram' prompt "
+                        "lookup (default) or a small 'model' transformer "
+                        "placed on each replica's device slice")
     p.set_defaults(fn=cmd_serve)
     p = sub.add_parser(
         "fleet",
@@ -248,6 +265,12 @@ def main(argv=None):
     p.add_argument("--static", action="store_true",
                    help="baseline: split the pool equally, disable "
                         "proposals/preemption and cross-VRE prefix sharing")
+    p.add_argument("--tick-interval", type=float, default=None,
+                   help="background arbiter control-loop interval in "
+                        "seconds: tick + apply_pending run automatically so "
+                        "deferred admissions/proposals land without manual "
+                        "pumping (default 0.05; 0 disables — the driver "
+                        "then pumps by hand)")
     p.add_argument("--workdir", default="/tmp/fleet")
     p.set_defaults(fn=cmd_fleet)
     p = sub.add_parser("destroy")

@@ -24,6 +24,7 @@ from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
 from repro.serving.engine import EdgeRouter, ServingEngine
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.replica import ReplicaSet
+from repro.serving.speculative import build_draft, supports_speculation
 from repro.training.train_step import (TrainStepConfig, init_state,
                                        make_train_step)
 
@@ -199,6 +200,11 @@ def build_server(ctx):
                                    monitor=ctx.monitor)
 
     slots_per_device = ctx.config.extra.get("slots_per_device")
+    speculate = int(ctx.config.extra.get("speculate", 0) or 0)
+    draft_kind = str(ctx.config.extra.get("draft", "ngram"))
+    # don't build drafts the engine would gate off anyway (rolling/SSM/MoE):
+    # the engine still logs speculative_unsupported via its own check
+    spec_supported = bool(speculate) and supports_speculation(model, max_seq)
 
     def factory(i: int, devices=None) -> ServingEngine:
         eng_slots, eng_devices = slots, devices
@@ -211,11 +217,22 @@ def build_server(ctx):
             # very capacity the grant added.
             eng_slots = int(slots_per_device) * len(devices)
             eng_devices = tuple(devices[:1])
+        draft = None
+        if spec_supported:
+            # one draft per replica: its KV state lives on the replica's
+            # device slice and is rebuilt by this factory on failover/
+            # respawn/rebalance — same lifecycle as the replica itself,
+            # while the draft *model and params* (and through them the jit
+            # cache) are shared fleet-wide like the target's
+            draft = build_draft(draft_kind, cfg, slots=eng_slots,
+                                max_seq=max_seq, devices=eng_devices,
+                                name=f"replica{i}-draft")
         return ServingEngine(model, params, slots=eng_slots,
                              max_seq=max_seq, name=f"replica{i}",
                              monitor=ctx.monitor, devices=eng_devices,
                              chunk_tokens=chunk_tokens,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache,
+                             speculate=speculate, draft=draft)
 
     # the ReplicaSet partitions the VRE mesh into disjoint per-replica
     # slices, so "scale the mesh" genuinely changes the hardware replicas

@@ -119,6 +119,8 @@ class FleetArbiter:
         self._order = 0
         self.admissions = 0
         self.preemptions = 0
+        self._ticker_stop = threading.Event()
+        self._ticker: Optional[threading.Thread] = None
 
     # -- plumbing ----------------------------------------------------------
     @staticmethod
@@ -487,6 +489,53 @@ class FleetArbiter:
                     regranted.append({"vre": name, **verdict})
         return {"admitted": admitted, "regranted": regranted,
                 "preempt_reserved": reserved}
+
+    # -- background control loop ------------------------------------------
+    def start_ticker(self, interval_s: float = 0.05,
+                     service: str = "lm-server"):
+        """Run ``tick()`` + ``apply_pending()`` on a background interval, so
+        queued admissions, deferred proposals, and reserved preemption
+        shrinks land without the driver invoking them by hand — the arbiter
+        becomes a control loop, not a library the driver must remember to
+        pump. ``apply_pending`` routes every move through the drain/adopt
+        resize path, so in-flight requests ride the automatic applications
+        exactly as they do the manual ones."""
+        if self._ticker is not None and self._ticker.is_alive():
+            return self
+        self._ticker_stop.clear()
+
+        def loop():
+            while not self._ticker_stop.wait(interval_s):
+                try:
+                    self.tick()
+                    self.apply_pending(service)
+                    # applied shrinks freed devices: admit/regrant now
+                    # rather than one full interval later
+                    self.tick()
+                except Exception as exc:    # the loop must outlive any VRE
+                    self.monitor.log("fleet", "ticker_error",
+                                     error=repr(exc))
+
+        self._ticker = threading.Thread(target=loop, name="fleet-ticker",
+                                        daemon=True)
+        self._ticker.start()
+        self.monitor.log("fleet", "ticker_started", interval_s=interval_s)
+        return self
+
+    def stop_ticker(self, timeout: float = 10.0) -> bool:
+        """Signal the control loop and join it. Returns False when the
+        thread is still running after ``timeout`` (e.g. blocked inside a
+        long ``apply_pending`` drain) — the handle is kept so a retry can
+        join it and so ``start_ticker`` can't spawn a second loop (or
+        un-stop this one by clearing the event) while it drains."""
+        self._ticker_stop.set()
+        t = self._ticker
+        if t is not None and t.is_alive():
+            t.join(timeout)
+            if t.is_alive():
+                return False
+        self._ticker = None
+        return True
 
     # -- endpoint directory ------------------------------------------------
     def _publish_endpoints(self, vre):

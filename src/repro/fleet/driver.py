@@ -65,7 +65,8 @@ def run_fleet(arbiter, specs: List[tuple], *, requests_per_phase: int = 12,
               rate_rps: float = 30.0, cold_rate_fraction: float = 0.1,
               max_new_tokens: int = 4, shared_prefix_len: int = 0,
               carry_requests: int = 2, wave_repeats: int = 2, rng=None,
-              timeout_s: float = 300.0, static: bool = False) -> dict:
+              timeout_s: float = 300.0, static: bool = False,
+              auto_tick: bool = False) -> dict:
     """Drive ``specs`` — a list of ``(config, claim)`` — through one hot
     phase each. Arbitrated mode admits tenant ``i`` at the start of phase
     ``i`` (later tenants queue, admission pressure preempts, grants are
@@ -187,13 +188,25 @@ def run_fleet(arbiter, specs: List[tuple], *, requests_per_phase: int = 12,
             t_arrive = time.monotonic()
             out = admit(pi)
             if out["status"] == "queued":
-                # admission pressure: reserve preemptive shrinks, apply
-                # them (in-flight work carried), then admit off the queue
-                arbiter.tick()
-                arbiter.apply_pending()
-                ticked = arbiter.tick()
-                assert names[pi] in ticked["admitted"], (
-                    names[pi], ticked, arbiter.status())
+                if auto_tick:
+                    # the arbiter's background ticker owns the control loop
+                    # (tick -> apply_pending -> tick): wait for it to admit
+                    # rather than pumping by hand
+                    deadline = time.monotonic() + timeout_s
+                    while arbiter.vre(names[pi]) is None:
+                        assert time.monotonic() < deadline, (
+                            names[pi], "ticker did not admit",
+                            arbiter.status())
+                        time.sleep(0.01)
+                else:
+                    # admission pressure: reserve preemptive shrinks, apply
+                    # them (in-flight work carried), then admit off the
+                    # queue
+                    arbiter.tick()
+                    arbiter.apply_pending()
+                    ticked = arbiter.tick()
+                    assert names[pi] in ticked["admitted"], (
+                        names[pi], ticked, arbiter.status())
                 vres[names[pi]] = arbiter.vre(names[pi])
             refresh()
             admission_events.append({
@@ -281,6 +294,7 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
                        prefix_cache_mb: float = 32.0,
                        shared_prefix_len: int = 48,
                        static: bool = False, endpoint_ttl_s: float = 30.0,
+                       tick_interval_s: Optional[float] = None,
                        rng=None) -> dict:
     """The benchmark scenario: ``n_vres`` same-pipeline tenants arrive one
     per phase over one shared pool and burst (a saturating Poisson wave) on
@@ -305,6 +319,9 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
     arbiter = FleetArbiter(devices=devices,
                            endpoint_ttl_s=endpoint_ttl_s,
                            share_prefix_caches=not static)
+    auto_tick = bool(tick_interval_s) and not static
+    if auto_tick:
+        arbiter.start_ticker(tick_interval_s)
     burst = pool - (n_vres - 1)      # hot grant: rest stay at their minima
     specs = []
     for i in range(n_vres):
@@ -329,8 +346,9 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
             shared_prefix_len=shared_prefix_len,
             wave_repeats=wave_repeats,
             rng=rng if rng is not None else np.random.default_rng(0),
-            static=static)
+            static=static, auto_tick=auto_tick)
     finally:
+        arbiter.stop_ticker()
         for cfg, _ in specs:
             try:
                 arbiter.release(cfg.name)

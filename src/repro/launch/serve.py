@@ -132,6 +132,13 @@ def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
         "prefix_hit_tokens": counter("prefix_hit_tokens"),
         "decode_steps": counter("decode_steps"),
     }
+    spec_steps = counter("spec_steps")
+    if spec_steps:
+        proposed = counter("spec_proposed")
+        out["spec_steps"] = spec_steps
+        out["spec_accept_rate"] = (counter("spec_accepted") / proposed
+                                   if proposed else 0.0)
+        out["spec_tokens_per_step"] = counter("spec_emitted") / spec_steps
     if "prefix_cache" in m:
         out["prefix_cache"] = m["prefix_cache"]
     return out
@@ -163,11 +170,13 @@ def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
 
 def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
                      monitor=None, mesh=None, chunk_tokens: int = 0,
-                     prefix_cache_mb: float = 0.0) -> ReplicaSet:
+                     prefix_cache_mb: float = 0.0, speculate: int = 0,
+                     draft: str = "ngram") -> ReplicaSet:
     import jax
     from repro.configs import get_config, reduced as reduce_cfg
     from repro.models.model import build_model
     from repro.serving.prefix_cache import PrefixCache
+    from repro.serving.speculative import build_draft, supports_speculation
 
     cfg = reduce_cfg(get_config(arch))
     model = build_model(cfg)
@@ -177,12 +186,20 @@ def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
         prefix_cache = PrefixCache(chunk_tokens,
                                    budget_bytes=int(prefix_cache_mb * 2**20),
                                    monitor=monitor)
+    # skip draft construction where the engine would gate speculation off
+    # (rolling/SSM/MoE archs): it would only allocate unused per-replica
+    # state on every spawn; the engine still logs the fallback
+    spec_supported = bool(speculate) and supports_speculation(model, max_seq)
 
     def factory(i: int, devices=None) -> ServingEngine:
+        d = build_draft(draft, cfg, slots=slots, max_seq=max_seq,
+                        devices=devices, name=f"replica{i}-draft") \
+            if spec_supported else None
         return ServingEngine(model, params, slots=slots, max_seq=max_seq,
                              name=f"replica{i}", monitor=monitor,
                              devices=devices, chunk_tokens=chunk_tokens,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache,
+                             speculate=speculate, draft=d)
 
     return ReplicaSet(factory, replicas=replicas, monitor=monitor, mesh=mesh,
                       prefix_cache=prefix_cache)
@@ -281,6 +298,16 @@ def validate_serving_args(args, error, zero_disables: bool = False) -> None:
             and not zero_disables:
         error("--prefix-cache-mb requires --chunk-tokens "
               "(prefix entries live at chunk boundaries)")
+    speculate = getattr(args, "speculate", None)
+    if speculate is not None and bad_chunk(speculate):
+        error(f"--speculate must be a positive number of draft tokens, got "
+              f"{speculate} ({off} to disable speculative decoding)")
+    draft = getattr(args, "draft", None)
+    if draft is not None and draft not in ("model", "ngram"):
+        error(f"--draft must be 'model' or 'ngram', got {draft!r}")
+    if draft is not None and not speculate and not zero_disables:
+        error("--draft requires --speculate "
+              "(a draft only exists to propose speculative tokens)")
 
 
 def main(argv=None):
@@ -299,6 +326,12 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-mb", type=float, default=None,
                     help="cross-request prefix-cache LRU budget in MiB "
                          "(omit to disable)")
+    ap.add_argument("--speculate", type=int, default=None,
+                    help="speculative decoding: draft tokens verified per "
+                         "decode step (omit to disable)")
+    ap.add_argument("--draft", choices=("model", "ngram"), default=None,
+                    help="draft engine for --speculate: 'ngram' prompt "
+                         "lookup (default) or a small 'model' transformer")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prompts share a prefix head of this many tokens "
                          "(0: independent prompts)")
@@ -306,12 +339,15 @@ def main(argv=None):
     validate_serving_args(args, ap.error)
     args.chunk_tokens = args.chunk_tokens or 0
     args.prefix_cache_mb = args.prefix_cache_mb or 0.0
+    args.speculate = args.speculate or 0
 
     monitor = Monitor()
     rs = build_replicaset(args.arch, replicas=args.replicas,
                           slots=args.slots, max_seq=args.max_seq,
                           monitor=monitor, chunk_tokens=args.chunk_tokens,
-                          prefix_cache_mb=args.prefix_cache_mb)
+                          prefix_cache_mb=args.prefix_cache_mb,
+                          speculate=args.speculate,
+                          draft=args.draft or "ngram")
     vocab = rs.engines[0].cfg.vocab_size      # the (reduced) serving config
     rs.start()
     rng = np.random.default_rng(0)

@@ -442,6 +442,20 @@ def _build_transformer(cfg, mesh, parallel, policy=None):
         h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
         return _logits(params["embed"], cfg, h), list(new_caches)
 
+    def decode_verify(params, caches, candidate_tokens, pos):
+        """Speculative-decode verify: score ``candidate_tokens`` (B, K+1) —
+        the last emitted token followed by K draft proposals — in ONE
+        batched call, returning logits for every candidate position. Rides
+        the chunk machinery: candidate K/V is written at absolute positions
+        ``pos..pos+K`` and chunk attention masks ``kpos <= qpos``, so
+        positions past the accepted prefix hold stale K/V that later decode
+        steps never attend (their masks stop at the slot's position) and
+        overwrite in place — rejection is a per-slot *position* rollback,
+        not a cache rollback. Exact only where chunked prefill is (all-
+        global attention); the serving engine gates on that, and rolling/
+        SSM/hybrid models (no ``decode_verify``) degrade to k=1."""
+        return prefill_chunk(params, caches, candidate_tokens, pos)
+
     def init_cache(batch: int, max_seq: int):
         caches, axes = [], []
         for sub in subs:
@@ -454,6 +468,7 @@ def _build_transformer(cfg, mesh, parallel, policy=None):
     return SimpleNamespace(cfg=cfg, init=init, forward=forward,
                            prefill=prefill, decode=decode,
                            prefill_chunk=prefill_chunk,
+                           decode_verify=decode_verify,
                            init_cache=init_cache, n_super=n_super, subs=subs,
                            grad_masks=grad_masks)
 

@@ -101,7 +101,7 @@ class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
                  name: str = "engine0", monitor=None, prefill_bucket: int = 16,
                  devices=None, chunk_tokens: Optional[int] = None,
-                 prefix_cache=None):
+                 prefix_cache=None, speculate: int = 0, draft=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -112,6 +112,8 @@ class ServingEngine:
         self.prefill_bucket = max(1, prefill_bucket)
         self.chunk_tokens = int(chunk_tokens) if chunk_tokens else 0
         self.prefix_cache = prefix_cache
+        self.speculate = int(speculate) if speculate else 0
+        self.draft = draft
         self.cache, _ = model.init_cache(slots, max_seq)
         self.devices = tuple(devices) if devices else ()
         if self.devices:
@@ -137,7 +139,9 @@ class ServingEngine:
                         "prefill_requests": 0, "decode_steps": 0,
                         "completed": 0, "prefill_chunks": 0,
                         "prefill_tokens": 0, "prefix_hit_tokens": 0,
-                        "prefill_chunk_batches": 0}
+                        "prefill_chunk_batches": 0, "spec_steps": 0,
+                        "spec_proposed": 0, "spec_accepted": 0,
+                        "spec_emitted": 0}
         # jitted prefill/decode are shared across all engines with the same
         # (model, slots, max_seq): replicas and failover respawns then reuse
         # one compile instead of paying it per replica. Prefill is jitted
@@ -225,6 +229,38 @@ class ServingEngine:
                 jit_cache[pkey] = (jax.jit(restore_fn),
                                    jax.jit(extract_fn, static_argnums=3))
             self._pc_restore, self._pc_extract = jit_cache[pkey]
+        # speculative decode rides the same padding-safety gate as chunking
+        # (verify writes candidate K/V at absolute positions and relies on
+        # the position-based chunk mask); models without a verify mode
+        # (rolling/SSM/hybrid) degrade cleanly to k=1 — the plain fused
+        # decode — and a missing draft means nothing to verify
+        self._spec_ok = bool(self.speculate) and self._pad_ok and \
+            self.draft is not None and \
+            getattr(model, "decode_verify", None) is not None
+        if self.speculate and not self._spec_ok and monitor is not None:
+            if getattr(model, "decode_verify", None) is None:
+                reason = "model has no decode_verify (rolling/SSM/hybrid)"
+            elif not self._pad_ok:
+                reason = "model is not padding-safe (rolling/SSM/MoE)"
+            else:
+                reason = "no draft engine configured"
+            monitor.log(name, "speculative_unsupported", reason=reason,
+                        speculate=self.speculate)
+        if self._spec_ok:
+            vkey = (slots, max_seq, self.speculate, "verify")
+            if vkey not in jit_cache:
+                def verify_fn(p, cache, toks, pos):
+                    # greedy argmax in-graph: the engine only needs the
+                    # target's token choices, not (slots, K+1, V) f32 logits
+                    # on the host every step
+                    logits, new_cache = model.decode_verify(p, cache, toks,
+                                                            pos)
+                    greedy = jnp.argmax(
+                        logits[..., :model.cfg.vocab_size],
+                        axis=-1).astype(jnp.int32)
+                    return greedy, new_cache
+                jit_cache[vkey] = jax.jit(verify_fn)
+            self._verify = jit_cache[vkey]
         # -- async decode loop state --------------------------------------
         self._stop = threading.Event()
         self._wake = threading.Event()
@@ -479,7 +515,8 @@ class ServingEngine:
 
     # -- decode step -------------------------------------------------------
     def step(self) -> int:
-        """One fused decode step for all active slots. Returns #active."""
+        """One fused decode (or speculative verify) step for all active
+        slots. Returns #active."""
         self._admit()
         if self._prefilling:
             self._prefill_step()
@@ -490,6 +527,42 @@ class ServingEngine:
                                self.prefill_backlog)
         if not active:
             return len(self._prefilling)
+        if self._spec_ok:
+            self._spec_step(active)
+        else:
+            self._decode_step(active)
+        if self.monitor is not None:
+            self.monitor.gauge(self.name, "queue_depth", self.load)
+        return len(active) + len(self._prefilling)
+
+    def _emit_token(self, i: int, r: Request, tok: int, now: float) -> bool:
+        """Record one generated token for slot ``i`` — the single source of
+        the stop conditions (budget, EOS, sequence limit), shared by the
+        plain decode step and the speculative emission loop so the two paths
+        cannot disagree on when a request completes. Returns done."""
+        if not r.generated:
+            r.first_token_t = now
+            if self.monitor is not None:
+                self.monitor.gauge(self.name, "ttft_s", r.ttft_s)
+        r.generated.append(tok)
+        self.metrics["tokens"] += 1
+        self.pos[i] += 1
+        done = (len(r.generated) >= r.max_new_tokens or tok == r.eos_id
+                or self.pos[i] + 1 >= self.max_seq)
+        if done:
+            r.done_t = now
+            self.metrics["completed"] += 1
+            if self.monitor is not None:
+                self.monitor.gauge(self.name, "latency_s", r.latency_s)
+            if not r.future.done():     # a detach may have failed the
+                r.future.set_result(    # future out from under a stuck
+                    np.asarray(r.generated, np.int32))   # decode loop
+            self.active[i] = None
+            self.pos[i] = -1
+        return done
+
+    def _decode_step(self, active: List[int]):
+        """One fused single-token decode over ``active``."""
         toks = np.zeros((self.slots, 1), np.int32)
         # idle / still-prefilling rows decode a scratch token at position
         # max_seq-1 (never written or attended by a real request: admission
@@ -508,30 +581,57 @@ class ServingEngine:
         self.metrics["decode_steps"] += 1
         now = time.perf_counter()
         for i in active:
+            self._emit_token(i, self.active[i], int(next_tokens[i]), now)
+
+    def _spec_step(self, active: List[int]):
+        """One speculative verify step over ``active``: the draft proposes
+        k tokens per slot, ``decode_verify`` greedily scores every candidate
+        position in one batched call, and each slot emits the longest
+        matching prefix plus one corrected (or, on full acceptance, bonus)
+        token — 1..k+1 tokens per step, bit-identical to the plain decode
+        path. Idle / still-prefilling rows ride along as scratch rows at
+        position max_seq-1 (in-bounds writes land on the scratch position,
+        overflowing candidate positions are dropped by the scatter), exactly
+        like the fused decode."""
+        k = self.speculate
+        items = [(i, self.active[i]) for i in active]
+        props = np.asarray(self.draft.propose(items, k), np.int32)
+        toks = np.zeros((self.slots, k + 1), np.int32)
+        pos = np.full((self.slots,), self.max_seq - 1, np.int32)
+        for row, (i, r) in enumerate(items):
+            toks[i, 0] = (r.generated[-1] if r.generated
+                          else int(r.tokens[-1]))
+            toks[i, 1:] = props[row]
+            pos[i] = max(int(self.pos[i]), 0)
+        greedy, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+        greedy = np.asarray(greedy)                      # (slots, k+1)
+        self.metrics["decode_steps"] += 1
+        self.metrics["spec_steps"] += 1
+        now = time.perf_counter()
+        accepted = emitted = 0
+        for i in active:
             r = self.active[i]
-            tok = int(next_tokens[i])
-            if not r.generated:
-                r.first_token_t = now
-                if self.monitor is not None:
-                    self.monitor.gauge(self.name, "ttft_s", r.ttft_s)
-            r.generated.append(tok)
-            self.metrics["tokens"] += 1
-            self.pos[i] += 1
-            done = (len(r.generated) >= r.max_new_tokens or tok == r.eos_id
-                    or self.pos[i] + 1 >= self.max_seq)
-            if done:
-                r.done_t = now
-                self.metrics["completed"] += 1
-                if self.monitor is not None:
-                    self.monitor.gauge(self.name, "latency_s", r.latency_s)
-                if not r.future.done():     # a detach may have failed the
-                    r.future.set_result(    # future out from under a stuck
-                        np.asarray(r.generated, np.int32))   # decode loop
-                self.active[i] = None
-                self.pos[i] = -1
+            m = 0       # accepted draft prefix: d_j must equal the target's
+            while m < k and toks[i, m + 1] == greedy[i, m]:   # own greedy
+                m += 1                                        # choice g_j
+            accepted += m
+            # emit g_0..g_m: the m accepted candidates plus the correction
+            # (m < k) or bonus (m == k) token; the stop conditions run
+            # per-token, so EOS / budget / seq-limit truncate mid-chain
+            # exactly where the non-speculative loop would stop
+            for j in range(m + 1):
+                emitted += 1
+                if self._emit_token(i, r, int(greedy[i, j]), now):
+                    break
+        self.metrics["spec_proposed"] += len(active) * k
+        self.metrics["spec_accepted"] += accepted
+        self.metrics["spec_emitted"] += emitted
         if self.monitor is not None:
-            self.monitor.gauge(self.name, "queue_depth", self.load)
-        return len(active) + len(self._prefilling)
+            self.monitor.gauge(self.name, "spec_accept_rate",
+                               accepted / (len(active) * k))
+            self.monitor.gauge(self.name, "spec_tokens_per_step",
+                               emitted / len(active))
 
     # -- synchronous loop (tests / oracles) --------------------------------
     def run_until_idle(self, max_steps: int = 10_000):

@@ -434,6 +434,15 @@ class ReplicaSet:
         out = {"replicas": len(per), "failovers": self._failovers,
                "rebalances": self._rebalances,
                "per_replica": per, "retired": retired, "total": agg}
+        if agg.get("spec_steps"):
+            # pool-level speculative summary (counters already aggregate
+            # retired replicas, so failover mid-speculation keeps its work)
+            out["speculative"] = {
+                "steps": agg["spec_steps"],
+                "accept_rate": (agg["spec_accepted"] / agg["spec_proposed"]
+                                if agg.get("spec_proposed") else 0.0),
+                "tokens_per_step": agg["spec_emitted"] / agg["spec_steps"],
+            }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out

@@ -23,6 +23,9 @@ def _serve_dir(tmp_path):
     ["--prefix-cache-mb", "0"],
     ["--prefix-cache-mb", "-1.5"],
     ["--prefix-cache-mb", "8"],              # requires --chunk-tokens
+    ["--speculate", "0"],
+    ["--speculate", "-3"],
+    ["--draft", "ngram"],                    # requires --speculate
 ])
 def test_cli_serve_rejects_malformed_serving_knobs(tmp_path, capsys, flags):
     d = _serve_dir(tmp_path)
@@ -32,7 +35,8 @@ def test_cli_serve_rejects_malformed_serving_knobs(tmp_path, capsys, flags):
     # Either way the process fails before touching jax, with a clear line.
     assert exc.value.code not in (0, None)
     msg = str(exc.value.code) + capsys.readouterr().err
-    assert "chunk-tokens" in msg or "prefix-cache-mb" in msg
+    assert "chunk-tokens" in msg or "prefix-cache-mb" in msg \
+        or "speculate" in msg or "draft" in msg
 
 
 @pytest.mark.parametrize("argv", [
@@ -56,6 +60,9 @@ def test_cli_fleet_rejects_malformed_knobs():
     with pytest.raises(SystemExit) as exc:
         cli.main(["fleet", "--prefix-cache-mb", "-2"])
     assert "prefix-cache-mb" in str(exc.value.code)
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["fleet", "--tick-interval", "-0.5"])
+    assert "tick-interval" in str(exc.value.code)
 
 
 def test_validate_serving_args_accepts_valid_and_disabled():
@@ -69,5 +76,7 @@ def test_validate_serving_args_accepts_valid_and_disabled():
     class B:
         chunk_tokens = 16
         prefix_cache_mb = 32.0
+        speculate = 6
+        draft = "ngram"
     serve_mod.validate_serving_args(B(), errors.append)
     assert errors == []

@@ -211,6 +211,55 @@ def test_proposal_deferred_then_regranted_on_release():
     assert arb.status()["deferred"] == {}
 
 
+def _wait_for(predicate, status, timeout_s=5.0):
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        assert time.monotonic() < deadline, status()
+        time.sleep(0.005)
+
+
+def test_ticker_applies_deferred_proposal_after_release():
+    """With the background ticker running, a deferred growth proposal lands
+    — reserved AND physically applied — within a tick of the blocking
+    tenant releasing, no manual tick()/apply_pending() pumping."""
+    arb = stub_arbiter(4)
+    arb.submit(StubConfig("a", (2, 1)), _claim(max_devices=4))
+    arb.submit(StubConfig("b", (2, 1)), _claim(max_devices=4, priority=1))
+    assert arb.propose_resize("b", (4, 1))["verdict"] == "deferred"
+    arb.start_ticker(interval_s=0.02)
+    try:
+        arb.release("a")                      # capacity frees...
+        _wait_for(lambda: arb.vre("b").config.mesh_shape == (4, 1),
+                  arb.status)                 # ...and the ticker applies
+        assert arb.vre("b").pending_resize is None
+        assert arb.status()["deferred"] == {}
+    finally:
+        arb.stop_ticker()
+
+
+def test_ticker_admits_queued_via_admission_pressure():
+    """A queued higher-priority tenant is admitted by the ticker alone:
+    tick reserves the preemptive shrink, apply_pending moves the victim,
+    the follow-up tick admits off the queue — no driver involvement (the
+    ``release`` path ticks inline, so this is the case only a background
+    loop covers)."""
+    arb = stub_arbiter(4)
+    arb.submit(StubConfig("lo", (4, 1)),
+               _claim(min_devices=1, max_devices=4, priority=0))
+    assert arb.submit(StubConfig("hi", (2, 1)),
+                      _claim(max_devices=4, priority=1))["status"] == "queued"
+    arb.start_ticker(interval_s=0.02)
+    arb.start_ticker(interval_s=0.02)         # idempotent while running
+    try:
+        _wait_for(lambda: arb.vre("hi") is not None, arb.status)
+        assert arb.vre("hi").state == "RUNNING"
+        assert arb.vre("lo").config.mesh_shape == (2, 1)   # shrunk, >= min
+        arb.placements()                      # grants still disjoint
+    finally:
+        arb.stop_ticker()
+    assert arb._ticker is None                # stop joins the thread
+
+
 def test_priority_preemption_with_apply():
     arb = stub_arbiter(4)
     arb.submit(StubConfig("lo", (1, 1)),

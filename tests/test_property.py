@@ -109,3 +109,86 @@ def test_rms_norm_unit_rms(x):
     rms = np.sqrt((out ** 2).mean(-1))
     finite = np.abs(x).max(-1) > 1e-3
     np.testing.assert_allclose(rms[finite], 1.0, atol=2e-2)
+
+
+# -- PrefixCache trie invariants ---------------------------------------------
+
+_PC_CHUNK = 4
+# tiny alphabet + short chains force heavy key collisions, shared ancestors,
+# and eviction cascades within a handful of operations
+_pc_chain = st.lists(st.integers(0, 2), min_size=1, max_size=3)
+_pc_op = st.one_of(
+    st.tuples(st.just("insert"), _pc_chain),
+    st.tuples(st.just("lookup"), _pc_chain),    # reorders LRU recency
+    st.tuples(st.just("adopt"), _pc_chain),     # cross-generation carry
+)
+
+
+def _pc_trie_entries(cache):
+    """(key, node) for every resident entry reachable from the root."""
+    out = []
+    stack = [((), cache._root)]
+    while stack:
+        key, node = stack.pop()
+        for piece, child in node.children.items():
+            ck = key + (piece,)
+            if child.entry is not None:
+                out.append((ck, child))
+            stack.append((ck, child))
+    return out
+
+
+def _pc_check_invariants(cache):
+    with cache._lock:
+        trie = _pc_trie_entries(cache)
+        lru = dict(cache._lru)
+        # resident set consistency: every reachable entry is LRU-tracked and
+        # every LRU entry is reachable (no unreachable-but-resident nodes)
+        assert {k for k, _ in trie} == set(lru)
+        for key, node in lru.items():
+            # chain integrity: every proper ancestor of a resident entry is
+            # itself resident, or the restore chain could never reach it
+            n = cache._root
+            for piece in key:
+                n = n.children[piece]
+                assert n.entry is not None, ("chain-broken", key)
+            assert n is node
+        # the bytes gauge equals the sum over resident entries, and the LRU
+        # budget is enforced after every mutation
+        assert cache.nbytes == sum(n.nbytes for n in lru.values())
+        assert cache.nbytes <= cache.budget or not lru
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_pc_op, min_size=1, max_size=24), st.integers(2, 6))
+def test_prefix_cache_trie_invariants(ops, budget_entries):
+    """Random insert/lookup/adopt sequences against a budget small enough to
+    force eviction cascades must never leave the trie chain-broken, a
+    resident node unreachable, or the bytes gauge out of sync with the
+    resident set (the invariants the serving engine's restore path relies
+    on)."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    def entry():
+        return {"k": np.ones((1, _PC_CHUNK, 1, 2), np.float32)}
+
+    entry_bytes = 4 * _PC_CHUNK * 2
+    cache = PrefixCache(_PC_CHUNK, budget_bytes=budget_entries * entry_bytes)
+    donor = PrefixCache(_PC_CHUNK, budget_bytes=16 * entry_bytes)
+    for op, chain in ops:
+        toks = [t for piece in chain for t in
+                [piece * 7 + 1] * _PC_CHUNK]       # chunk per chain element
+        if op == "insert":
+            # insert depth-by-depth the way the engine does at boundaries;
+            # insert() must refuse any chain-broken suffix on its own
+            for depth in range(_PC_CHUNK, len(toks) + 1, _PC_CHUNK):
+                cache.insert(toks[:depth], entry())
+        elif op == "lookup":
+            covered, _ = cache.lookup(toks)
+            assert covered % _PC_CHUNK == 0
+        else:
+            for depth in range(_PC_CHUNK, len(toks) + 1, _PC_CHUNK):
+                donor.insert(toks[:depth], entry())
+            cache.adopt_entries(donor)
+        _pc_check_invariants(cache)
+        _pc_check_invariants(donor)

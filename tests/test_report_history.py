@@ -1,0 +1,76 @@
+"""Perf-history dashboard renderer: artifact parsing, metric flattening,
+ordering, and the HTML/markdown outputs (stdlib-only, no jax)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import report_history  # noqa: E402
+
+
+def _artifact(tmp_path, name, ts, sha, **metrics):
+    sub = tmp_path / name                     # artifacts download one-per-dir
+    sub.mkdir()
+    (sub / "bench_serving.json").write_text(json.dumps({
+        **metrics,
+        "meta": {"git_sha": sha, "timestamp": ts, "run_id": name},
+    }))
+
+
+def test_flatten_metrics_numeric_scalars_only():
+    flat = report_history.flatten_metrics({
+        "tok_per_s": 100.5,
+        "failover": {"all_completed": True, "requests": 6},
+        "shared_prefix": {"speedup": 2.5, "prefix_cache": None},
+        "placements": ["cpu:0"],
+        "mode": "arbitrated",
+    })
+    assert flat == {"tok_per_s": 100.5, "failover.requests": 6.0,
+                    "shared_prefix.speedup": 2.5}
+
+
+def test_load_artifacts_sorted_and_robust(tmp_path):
+    _artifact(tmp_path, "run2", "2026-08-02T00:00:00Z", "b" * 40,
+              tok_per_s=120.0)
+    _artifact(tmp_path, "run1", "2026-08-01T00:00:00Z", "a" * 40,
+              tok_per_s=100.0, speculative={"speedup": 3.0})
+    (tmp_path / "garbage.json").write_text("{not json")
+    runs = report_history.load_artifacts(str(tmp_path))
+    assert [r["sha"] for r in runs] == ["a" * 10, "b" * 10]
+    series = report_history.metric_series(runs)
+    assert [v for _r, v in series["tok_per_s"]] == [100.0, 120.0]
+    # a metric only one run reports still renders, with a gap
+    assert len(series["speculative.speedup"]) == 1
+
+
+def test_render_outputs(tmp_path):
+    for i in range(3):
+        _artifact(tmp_path, f"run{i}", f"2026-08-0{i + 1}T00:00:00Z",
+                  f"{i}" * 40, tok_per_s=100.0 + i,
+                  speculative={"speedup": 3.0 + i})
+    runs = report_history.load_artifacts(str(tmp_path))
+    md = report_history.render_markdown(runs)
+    assert "## `tok_per_s`" in md and "## `speculative.speedup`" in md
+    assert "latest **102**" in md
+    html_page = report_history.render_html(runs)
+    assert "<svg" in html_page and "tok_per_s" in html_page
+    assert html_page.count("<section>") == 2
+    # metric filter restricts the page
+    only = report_history.render_html(runs, metrics=["tok_per_s"])
+    assert "speculative.speedup" not in only
+
+
+def test_cli_writes_pages(tmp_path):
+    _artifact(tmp_path, "run0", "2026-08-01T00:00:00Z", "c" * 40,
+              tok_per_s=50.0)
+    out_html = tmp_path / "hist.html"
+    out_md = tmp_path / "hist.md"
+    rc = report_history.main(["--dir", str(tmp_path),
+                              "--out-html", str(out_html),
+                              "--out-md", str(out_md)])
+    assert rc == 0
+    assert out_html.read_text().startswith("<!doctype html>")
+    assert "# Bench history" in out_md.read_text()
+    assert report_history.main(["--dir", str(tmp_path / "empty_missing")]) \
+        == 1

@@ -1,0 +1,306 @@
+"""Speculative decoding: draft proposals + batched verify must be token-
+identical to the non-speculative engine (and the stepwise oracle) across
+prompt lengths, EOS mid-chain, sequence limits, chunked-prefill interleave,
+and failover mid-speculation; rolling/SSM archs must degrade cleanly to
+k=1 (the plain fused decode)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.monitoring import Monitor
+from repro.models.model import build_model
+from repro.serving.engine import ServingEngine, greedy_generate
+from repro.serving.replica import ReplicaSet
+from repro.serving.speculative import (ModelDraft, NgramDraft, build_draft,
+                                       draft_model_config, draft_model_for)
+
+MAX_SEQ = 96
+K = 4
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get_config("yi-9b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("speculate", K)
+    if kw["speculate"] and "draft" not in kw:
+        kw["draft"] = NgramDraft()
+    return ServingEngine(model, params, **kw)
+
+
+def _check_oracle(model, params, eng, prompts, max_new=8):
+    futs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run_until_idle()
+    for p, f in zip(prompts, futs):
+        ref = greedy_generate(model, params, p, max_new, eng.max_seq)
+        np.testing.assert_array_equal(f.result(), ref)
+
+
+# -- draft units -------------------------------------------------------------
+
+def test_ngram_draft_prompt_lookup():
+    class R:
+        tokens = np.array([5, 1, 2, 3, 9, 1, 2, 3], np.int64)
+        generated = []
+
+    d = NgramDraft(max_ngram=3)
+    # trailing [1,2,3] matched at position 1 -> continuation [9,1,2,3...],
+    # padded by repeating the last available token
+    props = d.propose([(0, R())], 4)
+    np.testing.assert_array_equal(props[0], [9, 1, 2, 3])
+    long_props = d.propose([(0, R())], 7)
+    np.testing.assert_array_equal(long_props[0], [9, 1, 2, 3, 3, 3, 3])
+
+
+def test_ngram_draft_repeat_last_fallback():
+    class R:
+        tokens = np.array([4, 7, 11], np.int64)   # no repeated n-gram
+        generated = [13]
+
+    props = NgramDraft().propose([(0, R())], 3)
+    np.testing.assert_array_equal(props[0], [13, 13, 13])
+
+
+def test_draft_model_config_same_tokenizer(served_model):
+    cfg, _, _ = served_model
+    dcfg = draft_model_config(cfg)
+    assert dcfg.vocab_size == cfg.vocab_size
+    assert dcfg.padded_vocab == cfg.padded_vocab
+    assert dcfg.family == "dense" and dcfg.moe is None and dcfg.ssm is None
+    assert dcfg.d_model <= cfg.d_model
+    # shared across callers: one draft model object (and jit cache) per arch
+    assert draft_model_for(cfg)[0] is draft_model_for(cfg)[0]
+
+
+# -- token parity ------------------------------------------------------------
+
+def test_spec_parity_across_prompt_lengths(served_model):
+    """The hard invariant: speculative greedy decode is bit-identical to the
+    stepwise oracle across short, bucket-straddling, and long prompts."""
+    cfg, model, params = served_model
+    eng = _engine(model, params)
+    assert eng._spec_ok
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n)
+               for n in (1, 3, 15, 16, 17, 40)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["spec_steps"] > 0
+    assert eng.metrics["spec_emitted"] == eng.metrics["tokens"]
+
+
+def test_spec_parity_with_model_draft(served_model):
+    """Same invariant through the small-transformer draft: acceptance may
+    differ, tokens must not."""
+    cfg, model, params = served_model
+    draft = build_draft("model", cfg, slots=3, max_seq=MAX_SEQ)
+    assert isinstance(draft, ModelDraft)
+    eng = _engine(model, params, draft=draft)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n) for n in (4, 12, 23)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["spec_steps"] > 0
+
+
+def test_spec_parity_mid_generation_eos(served_model):
+    """EOS accepted mid-chain must truncate the emission exactly where the
+    non-speculative engine stops — including the EOS token itself."""
+    cfg, model, params = served_model
+    rng = np.random.default_rng(2)
+    p = rng.integers(1, cfg.vocab_size, size=9)
+    ref = greedy_generate(model, params, p, 16, MAX_SEQ)
+    eos = int(ref[3])        # a token known to appear mid-generation
+    plain = ServingEngine(model, params, slots=2, max_seq=MAX_SEQ)
+    f_plain = plain.submit(p, max_new_tokens=16, eos_id=eos)
+    plain.run_until_idle()
+    spec = _engine(model, params)
+    f_spec = spec.submit(p, max_new_tokens=16, eos_id=eos)
+    spec.run_until_idle()
+    np.testing.assert_array_equal(f_spec.result(), f_plain.result())
+    assert int(f_spec.result()[-1]) == eos
+    assert len(f_spec.result()) < 16
+
+
+def test_spec_parity_at_sequence_limit(served_model):
+    """A prompt near max_seq: candidate positions overrun the cache end
+    (writes dropped by the scatter) and emission must stop exactly at the
+    sequence limit, like the plain engine."""
+    cfg, model, params = served_model
+    rng = np.random.default_rng(3)
+    p = rng.integers(1, cfg.vocab_size, size=MAX_SEQ - 4)
+    plain = ServingEngine(model, params, slots=2, max_seq=MAX_SEQ)
+    f_plain = plain.submit(p, max_new_tokens=16)
+    plain.run_until_idle()
+    spec = _engine(model, params)
+    f_spec = spec.submit(p, max_new_tokens=16)
+    spec.run_until_idle()
+    np.testing.assert_array_equal(f_spec.result(), f_plain.result())
+    # decode stops when pos+1 hits max_seq: exactly MAX_SEQ - len(p) tokens
+    # fit — the seq-limit stop, well under the 16-token budget
+    assert len(f_spec.result()) == MAX_SEQ - len(p) == 4
+
+
+def test_spec_single_token_budget(served_model):
+    """max_new_tokens=1 through the verify path: exactly one token, equal to
+    the oracle's first."""
+    cfg, model, params = served_model
+    rng = np.random.default_rng(4)
+    p = rng.integers(1, cfg.vocab_size, size=7)
+    eng = _engine(model, params)
+    f = eng.submit(p, max_new_tokens=1)
+    eng.run_until_idle()
+    ref = greedy_generate(model, params, p, 1, MAX_SEQ)
+    np.testing.assert_array_equal(f.result(), ref)
+
+
+def test_spec_with_chunked_prefill_interleave(served_model):
+    """Chunked prefill and speculation in one engine: a long prompt chunks
+    in while other slots speculate; everything stays oracle-exact."""
+    cfg, model, params = served_model
+    eng = _engine(model, params, chunk_tokens=16, slots=3)
+    assert eng._chunk_ok and eng._spec_ok
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n) for n in (60, 6, 9)]
+    _check_oracle(model, params, eng, prompts)
+    assert eng.metrics["prefill_chunks"] > 0
+    assert eng.metrics["spec_steps"] > 0
+
+
+# -- fallbacks ---------------------------------------------------------------
+
+def test_rolling_arch_degrades_to_plain_decode(served_model):
+    """gemma2's rolling windows are not padding-safe: speculation must fall
+    back to k=1 (plain decode), log why, and stay exact."""
+    cfg = reduced(get_config("gemma2-27b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    mon = Monitor()
+    eng = ServingEngine(model, params, slots=2, max_seq=MAX_SEQ,
+                        speculate=K, draft=NgramDraft(), monitor=mon)
+    assert not eng._spec_ok
+    assert any(e["event"] == "speculative_unsupported"
+               for e in mon.events(eng.name))
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, cfg.vocab_size, size=20)
+    f = eng.submit(p, max_new_tokens=6)
+    eng.run_until_idle()
+    assert eng.metrics["spec_steps"] == 0
+    np.testing.assert_array_equal(
+        f.result(), greedy_generate(model, params, p, 6, MAX_SEQ))
+
+
+def test_ssm_arch_degrades_to_plain_decode():
+    """mamba2 has no verify mode (recurrent state can't re-score a chunk in
+    place): clean k=1 fallback, exact output."""
+    cfg = reduced(get_config("mamba2-370m"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    assert getattr(model, "decode_verify", None) is None
+    eng = ServingEngine(model, params, slots=2, max_seq=MAX_SEQ,
+                        speculate=K, draft=NgramDraft())
+    assert not eng._spec_ok
+    rng = np.random.default_rng(7)
+    p = rng.integers(1, cfg.vocab_size, size=12)
+    f = eng.submit(p, max_new_tokens=5)
+    eng.run_until_idle()
+    assert eng.metrics["spec_steps"] == 0
+    np.testing.assert_array_equal(
+        f.result(), greedy_generate(model, params, p, 5, MAX_SEQ))
+
+
+def test_build_paths_skip_draft_on_unsupported_arch():
+    """The serving builders consult the engine's own gate before building
+    drafts: a rolling-cache arch with speculate requested must not allocate
+    per-replica draft state it would never use."""
+    from repro.launch.serve import build_replicaset
+    from repro.serving.speculative import supports_speculation
+
+    rs = build_replicaset("gemma2-27b", replicas=1, slots=2, max_seq=MAX_SEQ,
+                          speculate=K, draft="ngram")
+    try:
+        eng = rs.engines[0]
+        assert eng.draft is None and not eng._spec_ok
+        assert not supports_speculation(eng.model, MAX_SEQ)
+    finally:
+        rs.stop()
+
+
+# -- lifecycle ---------------------------------------------------------------
+
+def test_failover_mid_speculation(served_model):
+    """Kill a speculating replica mid-flight: rescheduled requests re-sync
+    on the successor's draft and finish token-identical (greedy determinism
+    holds through the draft layer because the draft never decides tokens,
+    only proposes them)."""
+    cfg, model, params = served_model
+
+    def factory(i, devices=None):
+        return ServingEngine(model, params, slots=2, max_seq=MAX_SEQ,
+                             name=f"spec{i}", speculate=K,
+                             draft=NgramDraft())
+
+    rs = ReplicaSet(factory, replicas=2, respawn=True, check_interval=0.02)
+    rs.start()
+    try:
+        rng = np.random.default_rng(8)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(n))
+                   for n in rng.integers(5, 25, size=4)]
+        reqs = [rs.submit_request(p, max_new_tokens=10) for p in prompts]
+        rs.engines[0].kill()
+        for r in reqs:
+            r.future.result(timeout=300)
+        for p, r in zip(prompts, reqs):
+            ref = greedy_generate(model, params, p, 10, MAX_SEQ)
+            np.testing.assert_array_equal(r.future.result(), ref)
+        m = rs.metrics()
+        assert m["failovers"] >= 1
+        assert m["speculative"]["steps"] > 0        # pool-level aggregation
+        assert 0.0 <= m["speculative"]["accept_rate"] <= 1.0
+    finally:
+        rs.stop()
+
+
+def test_model_draft_slot_reuse_resyncs(served_model):
+    """A slot reused by a new request must not inherit the old request's
+    draft cache: the ModelDraft re-syncs from the new context."""
+    cfg, model, params = served_model
+    draft = build_draft("model", cfg, slots=1, max_seq=MAX_SEQ)
+    eng = _engine(model, params, slots=1, draft=draft)
+    rng = np.random.default_rng(9)
+    for _ in range(2):                    # sequential requests share slot 0
+        p = rng.integers(1, cfg.vocab_size, size=int(rng.integers(5, 15)))
+        f = eng.submit(p, max_new_tokens=6)
+        eng.run_until_idle()
+        np.testing.assert_array_equal(
+            f.result(), greedy_generate(model, params, p, 6, MAX_SEQ))
+
+
+# -- observability -----------------------------------------------------------
+
+def test_spec_gauges_and_metrics(served_model):
+    cfg, model, params = served_model
+    mon = Monitor()
+    eng = _engine(model, params, monitor=mon)
+    rng = np.random.default_rng(10)
+    futs = [eng.submit(rng.integers(1, cfg.vocab_size, size=8),
+                       max_new_tokens=10) for _ in range(3)]
+    eng.run_until_idle()
+    for f in futs:
+        assert len(f.result()) == 10
+    m = eng.metrics
+    assert m["spec_steps"] > 0
+    assert m["spec_proposed"] >= m["spec_accepted"] >= 0
+    assert m["spec_emitted"] == m["tokens"]
+    # fewer verify steps than tokens: speculation actually multi-tokened
+    assert m["decode_steps"] < m["tokens"]
+    rate = mon.gauge_stats(eng.name, "spec_accept_rate")
+    per_step = mon.gauge_stats(eng.name, "spec_tokens_per_step")
+    assert rate["n"] > 0 and 0.0 <= rate["last"] <= 1.0
+    assert per_step["n"] > 0 and per_step["last"] >= 1.0

@@ -9,6 +9,16 @@ full (timestamp, sha, value) series — plus a markdown variant for PRs.
     python benchmarks/report_history.py --dir artifacts/ \
         --out-html bench_history.html --out-md bench_history.md
 
+``--baseline benchmarks/ci_baseline.json`` annotates every gated metric
+with its floor and flags the latest value when it sits below the floor —
+the same floor arithmetic ``bench_serving --check-baseline`` enforces, so
+the dashboard shows *why* a lane went red.
+
+``--records run.jsonl ...`` switches to flight-recorder input: instead of
+trend sparklines it renders per-request TTFT and latency scatters (x =
+arrival time) from the record store's JSONL, disrupted requests marked in
+red. Directories are searched recursively for ``*.jsonl``.
+
 Stdlib only (the artifacts are plain JSON): it runs anywhere, including the
 CI job itself and a laptop with a pile of ``gh run download`` outputs.
 """
@@ -120,12 +130,66 @@ def sparkline_svg(values: List[float], width: int = 240,
         f'</svg>')
 
 
+def scatter_svg(points: List[Tuple[float, float, bool]], width: int = 420,
+                height: int = 120, pad: int = 8) -> str:
+    """Inline SVG scatter of (x, y, disrupted) points — same visual idiom
+    as ``sparkline_svg``. Disrupted requests render red so a preemption's
+    latency cost is visible at a glance."""
+    if not points:
+        return ""
+    xs = [p[0] for p in points]
+    ys = [p[1] for p in points]
+    xlo, xhi = min(xs), max(xs)
+    ylo, yhi = min(ys), max(ys)
+    xspan = (xhi - xlo) or 1.0
+    yspan = (yhi - ylo) or 1.0
+    dots = []
+    for x, y, disrupted in points:
+        cx = pad + (width - 2 * pad) * ((x - xlo) / xspan)
+        cy = height - pad - (height - 2 * pad) * ((y - ylo) / yspan)
+        color = "#c0392b" if disrupted else "#2a6fb0"
+        dots.append(f'<circle cx="{cx:.1f}" cy="{cy:.1f}" r="2.5" '
+                    f'fill="{color}" fill-opacity="0.75"/>')
+    return (f'<svg width="{width}" height="{height}" role="img">'
+            f'{"".join(dots)}</svg>')
+
+
+def load_baseline(path: str) -> Dict[str, Tuple[float, float]]:
+    """``ci_baseline.json`` -> metric -> (floor, tolerance), using the same
+    bare-number-means-default-tolerance convention ``check_baseline`` does."""
+    with open(path) as f:
+        baseline = json.load(f)
+    out = {}
+    for key, spec in baseline.get("min_metrics", {}).items():
+        if isinstance(spec, dict):
+            out[key] = (float(spec["floor"]), float(spec.get("tolerance",
+                                                             0.30)))
+        else:
+            out[key] = (float(spec), 0.30)
+    return out
+
+
+def baseline_status(name: str, value: float,
+                    baseline: Optional[Dict[str, Tuple[float, float]]]
+                    ) -> Optional[Tuple[str, float]]:
+    """(verdict, effective_floor) for a gated metric, or None when the
+    metric isn't in the baseline. Verdict is "regression" when the value
+    sits below floor*(1-tolerance) — the gate CI enforces."""
+    if not baseline or name not in baseline:
+        return None
+    floor, tol = baseline[name]
+    eff = floor * (1.0 - tol)
+    return ("regression" if value < eff else "ok", eff)
+
+
 def _fmt(v: float) -> str:
     return f"{v:.4g}"
 
 
 def render_markdown(runs: List[dict],
-                    metrics: Optional[List[str]] = None) -> str:
+                    metrics: Optional[List[str]] = None,
+                    baseline: Optional[Dict[str, Tuple[float, float]]] = None
+                    ) -> str:
     series = metric_series(runs, metrics)
     lines = ["# Bench history", "",
              f"{len(runs)} runs, {len(series)} metrics "
@@ -135,9 +199,17 @@ def render_markdown(runs: List[dict],
         vals = [v for _r, v in pts]
         first, last = vals[0], vals[-1]
         delta = (last - first) / abs(first) * 100 if first else 0.0
+        stat = baseline_status(name, last, baseline)
+        gate = ""
+        if stat is not None:
+            verdict, eff = stat
+            gate = (f" · **REGRESSION** below floor {_fmt(eff)}"
+                    if verdict == "regression"
+                    else f" · floor {_fmt(eff)} ok")
         lines += [f"## `{name}`", "",
                   f"latest **{_fmt(last)}** · min {_fmt(min(vals))} · "
-                  f"max {_fmt(max(vals))} · {delta:+.1f}% since first run",
+                  f"max {_fmt(max(vals))} · {delta:+.1f}% since first run"
+                  f"{gate}",
                   "", "| timestamp | sha | value |", "| --- | --- | --- |"]
         lines += [f"| {r['timestamp']} | {r['sha'] or '—'} | {_fmt(v)} |"
                   for r, v in pts]
@@ -146,7 +218,9 @@ def render_markdown(runs: List[dict],
 
 
 def render_html(runs: List[dict],
-                metrics: Optional[List[str]] = None) -> str:
+                metrics: Optional[List[str]] = None,
+                baseline: Optional[Dict[str, Tuple[float, float]]] = None
+                ) -> str:
     series = metric_series(runs, metrics)
     head = (
         "<!doctype html><html><head><meta charset='utf-8'>"
@@ -171,12 +245,20 @@ def render_html(runs: List[dict],
             f"<tr><td>{html.escape(r['timestamp'])}</td>"
             f"<td><code>{html.escape(r['sha'] or '—')}</code></td>"
             f"<td>{_fmt(v)}</td></tr>" for r, v in pts)
+        stat = baseline_status(name, vals[-1], baseline)
+        gate = ""
+        if stat is not None:
+            verdict, eff = stat
+            gate = (f" · <b style='color:#c0392b'>REGRESSION</b> "
+                    f"below floor {_fmt(eff)}"
+                    if verdict == "regression"
+                    else f" · floor {_fmt(eff)} <b>ok</b>")
         parts.append(
             f"<section><h2><code>{html.escape(name)}</code></h2>"
             f"{sparkline_svg(vals)}"
             f"<p class='stats'>latest <b>{_fmt(vals[-1])}</b> · "
             f"min {_fmt(min(vals))} · max {_fmt(max(vals))} · "
-            f"{len(vals)} points</p>"
+            f"{len(vals)} points{gate}</p>"
             f"<details><summary>series</summary><table>"
             f"<tr><th>timestamp</th><th>sha</th><th>value</th></tr>"
             f"{rows}</table></details></section>")
@@ -184,11 +266,108 @@ def render_html(runs: List[dict],
     return "".join(parts)
 
 
+def load_records(paths: List[str]) -> List[dict]:
+    """Flight-recorder JSONL -> request records (meta/control lines and
+    malformed lines skipped), sorted by arrival time. Plain-json parsing on
+    purpose — the dashboard must not need the repro package installed."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, fns in os.walk(p):
+                files += [os.path.join(root, fn) for fn in sorted(fns)
+                          if fn.endswith(".jsonl")]
+        else:
+            files.append(p)
+    records = []
+    for path in files:
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        obj = json.loads(line)
+                    except ValueError:
+                        continue
+                    if isinstance(obj, dict) and obj.get("kind") == "request":
+                        records.append(obj)
+        except OSError as exc:
+            print(f"skipping {path}: {exc}", file=sys.stderr)
+    records.sort(key=lambda r: r.get("arrival_s", 0.0))
+    return records
+
+
+def _record_points(records: List[dict], field: str
+                   ) -> List[Tuple[float, float, bool]]:
+    pts = []
+    for r in records:
+        v = (r.get("timings") or {}).get(field)
+        if v is None:
+            continue
+        pts.append((float(r.get("arrival_s", 0.0)), float(v),
+                    bool(r.get("disruptions"))))
+    return pts
+
+
+def render_records_html(records: List[dict]) -> str:
+    head = (
+        "<!doctype html><html><head><meta charset='utf-8'>"
+        "<title>Request records</title><style>"
+        "body{font-family:system-ui,sans-serif;margin:2rem;color:#222}"
+        "section{margin-bottom:1.5rem;border-bottom:1px solid #eee;"
+        "padding-bottom:1rem}"
+        ".stats{color:#666;font-size:0.9rem}"
+        "</style></head><body><h1>Request records</h1>")
+    tenants = sorted({r.get("tenant", "") for r in records})
+    disrupted = sum(1 for r in records if r.get("disruptions"))
+    parts = [head,
+             f"<p class='stats'>{len(records)} requests · "
+             f"{len(tenants)} tenants · {disrupted} disrupted "
+             f"(<span style='color:#c0392b'>red</span>)</p>"]
+    for field, label in (("ttft_s", "TTFT"), ("latency_s", "latency")):
+        pts = _record_points(records, field)
+        if not pts:
+            continue
+        vals = sorted(v for _x, v, _d in pts)
+        p50 = vals[len(vals) // 2]
+        parts.append(
+            f"<section><h2>{label} vs arrival</h2>{scatter_svg(pts)}"
+            f"<p class='stats'>p50 {_fmt(p50)}s · max {_fmt(vals[-1])}s · "
+            f"{len(pts)} points</p></section>")
+    parts.append("</body></html>")
+    return "".join(parts)
+
+
+def render_records_markdown(records: List[dict]) -> str:
+    tenants = sorted({r.get("tenant", "") for r in records})
+    disrupted = sum(1 for r in records if r.get("disruptions"))
+    lines = ["# Request records", "",
+             f"{len(records)} requests · {len(tenants)} tenants · "
+             f"{disrupted} disrupted", ""]
+    for field, label in (("ttft_s", "TTFT"), ("latency_s", "latency")):
+        pts = _record_points(records, field)
+        if not pts:
+            continue
+        vals = sorted(v for _x, v, _d in pts)
+        lines += [f"## {label}", "",
+                  f"p50 {_fmt(vals[len(vals) // 2])}s · "
+                  f"max {_fmt(vals[-1])}s · {len(pts)} requests", ""]
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--dir", required=True,
+    ap.add_argument("--dir", default=None,
                     help="directory of downloaded bench report JSONs "
                          "(searched recursively)")
+    ap.add_argument("--records", nargs="+", default=None,
+                    help="flight-recorder JSONL files/dirs: render "
+                         "per-request TTFT/latency scatters instead of "
+                         "metric trends")
+    ap.add_argument("--baseline", default=None,
+                    help="ci_baseline.json: annotate gated metrics with "
+                         "their floors and flag regressions")
     ap.add_argument("--out-html", default=None,
                     help="write the HTML trend page here")
     ap.add_argument("--out-md", default=None,
@@ -197,6 +376,31 @@ def main(argv=None) -> int:
                     help="comma-separated dotted metric paths to render "
                          "(default: every numeric metric found)")
     args = ap.parse_args(argv)
+    if bool(args.dir) == bool(args.records):
+        print("exactly one of --dir or --records is required",
+              file=sys.stderr)
+        return 2
+    if args.records:
+        records = load_records(args.records)
+        if not records:
+            print(f"no request records found in {args.records}",
+                  file=sys.stderr)
+            return 1
+        if not args.out_html and not args.out_md:
+            print(render_records_markdown(records))
+            return 0
+        if args.out_html:
+            with open(args.out_html, "w") as f:
+                f.write(render_records_html(records))
+            print(f"wrote {args.out_html} ({len(records)} records)",
+                  file=sys.stderr)
+        if args.out_md:
+            with open(args.out_md, "w") as f:
+                f.write(render_records_markdown(records))
+            print(f"wrote {args.out_md} ({len(records)} records)",
+                  file=sys.stderr)
+        return 0
+    baseline = load_baseline(args.baseline) if args.baseline else None
     runs = load_artifacts(args.dir)
     if not runs:
         print(f"no report JSONs found under {args.dir}", file=sys.stderr)
@@ -204,15 +408,15 @@ def main(argv=None) -> int:
     metrics = [m.strip() for m in args.metrics.split(",") if m.strip()] \
         if args.metrics else None
     if not args.out_html and not args.out_md:
-        print(render_markdown(runs, metrics))
+        print(render_markdown(runs, metrics, baseline))
         return 0
     if args.out_html:
         with open(args.out_html, "w") as f:
-            f.write(render_html(runs, metrics))
+            f.write(render_html(runs, metrics, baseline))
         print(f"wrote {args.out_html} ({len(runs)} runs)", file=sys.stderr)
     if args.out_md:
         with open(args.out_md, "w") as f:
-            f.write(render_markdown(runs, metrics))
+            f.write(render_markdown(runs, metrics, baseline))
         print(f"wrote {args.out_md} ({len(runs)} runs)", file=sys.stderr)
     return 0
 

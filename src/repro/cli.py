@@ -121,6 +121,8 @@ def cmd_serve(args):
     if args.speculate:
         vre.config.extra["speculate"] = args.speculate
         vre.config.extra["draft"] = args.draft or "ngram"
+    if args.record:
+        vre.config.extra["record_path"] = args.record
     vre.instantiate()
     try:
         rng = np.random.default_rng(args.seed)
@@ -177,9 +179,40 @@ def cmd_fleet(args):
         prefix_cache_mb=prefix_cache_mb,
         shared_prefix_len=args.shared_prefix, static=args.static,
         tick_interval_s=tick_interval or None,
+        speculate=args.speculate or 0,
+        record_dir=args.record_dir,
         rng=np.random.default_rng(args.seed))
     print(json.dumps(report, indent=2))
     return report
+
+
+def cmd_trace(args):
+    """Query a flight-recorder record store: summary + per-request span
+    trees. ``--records`` takes files or directories of ``*.jsonl``."""
+    from repro.observability import RecordStore, format_span_tree
+
+    store = RecordStore.load(*args.records)
+    if not len(store) and not store.controls:
+        sys.exit(f"trace: no records found under {args.records}")
+    print(json.dumps(store.summary(), indent=2))
+    matches = store.query(tenant=args.tenant, rid=args.rid,
+                          since_s=args.since, until_s=args.until,
+                          disrupted=True if args.disrupted else None)
+    if args.rid is None and not args.disrupted and args.tenant is None:
+        # no filter: default to the most disrupted / slowest requests
+        matches = sorted(matches,
+                         key=lambda r: (len(r.get("disruptions", ())),
+                                        r.get("timings", {}).get("latency_s")
+                                        or 0.0),
+                         reverse=True)
+    for rec in matches[:args.limit]:
+        print()
+        print(format_span_tree(rec))
+    shown = min(len(matches), args.limit)
+    if len(matches) > shown:
+        print(f"\n({len(matches) - shown} more matching records; raise "
+              f"--limit or filter with --tenant/--rid)")
+    return store
 
 
 def cmd_destroy(args):
@@ -237,6 +270,9 @@ def main(argv=None):
                    help="draft engine for --speculate: 'ngram' prompt "
                         "lookup (default) or a small 'model' transformer "
                         "placed on each replica's device slice")
+    p.add_argument("--record", default=None, metavar="PATH",
+                   help="flight recorder: one JSONL record per request "
+                        "(inspect with `python -m repro.cli trace`)")
     p.set_defaults(fn=cmd_serve)
     p = sub.add_parser(
         "fleet",
@@ -271,8 +307,35 @@ def main(argv=None):
                         "deferred admissions/proposals land without manual "
                         "pumping (default 0.05; 0 disables — the driver "
                         "then pumps by hand)")
+    p.add_argument("--speculate", type=int, default=None,
+                   help="speculative decoding per tenant: draft tokens "
+                        "verified per decode step (0 disables)")
+    p.add_argument("--record-dir", default=None, metavar="DIR",
+                   help="flight recorder: one JSONL record file per VRE "
+                        "under DIR (inspect with `python -m repro.cli "
+                        "trace --records DIR`)")
     p.add_argument("--workdir", default="/tmp/fleet")
     p.set_defaults(fn=cmd_fleet)
+    p = sub.add_parser(
+        "trace",
+        help="query a flight-recorder store: percentile summary and "
+             "per-request span trees")
+    p.add_argument("--records", nargs="+", required=True, metavar="PATH",
+                   help="record JSONL file(s) or directories of *.jsonl")
+    p.add_argument("--tenant", default=None,
+                   help="only this tenant/VRE's requests")
+    p.add_argument("--rid", type=int, default=None,
+                   help="one request id")
+    p.add_argument("--since", type=float, default=None, metavar="S",
+                   help="arrival window start (seconds from recorder epoch)")
+    p.add_argument("--until", type=float, default=None, metavar="S",
+                   help="arrival window end (seconds from recorder epoch)")
+    p.add_argument("--disrupted", action="store_true",
+                   help="only requests that rode through a control-plane "
+                        "event (failover/preemption/resize)")
+    p.add_argument("--limit", type=int, default=5,
+                   help="span trees to print (default 5)")
+    p.set_defaults(fn=cmd_trace)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)
     p.set_defaults(fn=cmd_destroy)

@@ -122,9 +122,18 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
                 scaler.notify_resized()
         return None
 
+    # classify the disruption before the config mutates: a device-count
+    # shrink is a preemption (the arbiter clawing capacity back), anything
+    # else is a plain resize — carried requests' records name which one
+    # they rode through
+    old_shape = tuple(vre.config.mesh_shape)
+    new_shape = tuple(vre.pending_resize)
+    kind = "preemption" if int(np.prod(new_shape)) < int(np.prod(old_shape)) \
+        else "resize"
     t0 = time.perf_counter()
     carried = []
     old_prefix_cache = None
+    recorder = None
     if service in vre.services:
         handle = vre.service(service)
         scaler = getattr(handle, "autoscaler", None)
@@ -134,10 +143,16 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
         if rs is not None:
             carried = rs.detach_requests()
             old_prefix_cache = getattr(rs, "prefix_cache", None)
+    for r in carried:
+        r.trace.event(kind, old_shape=list(old_shape),
+                      new_shape=list(new_shape))
     try:
         report, _ = resize_if_requested(vre)
         new_rs = getattr(vre.service(service), "replicaset", None) \
             if service in vre.services else None
+        # the old pool's recorder was stopped with its service during the
+        # destroy; the successor appends to the same record file
+        recorder = getattr(new_rs, "recorder", None)
         if new_rs is not None and carried:
             new_rs.adopt(carried)
         if new_rs is not None and old_prefix_cache is not None:
@@ -158,5 +173,13 @@ def resize_serving(vre, service: str = "lm-server") -> Optional[dict]:
     vre.monitor.log("vre", "resize_applied",
                     old=list(report.old_shape), new=list(report.new_shape),
                     carried_requests=len(carried), downtime_s=downtime)
+    if recorder is not None:
+        # control-plane record in the same JSONL stream the per-request
+        # records land in: the store can correlate disruptions with the
+        # requests that rode through them
+        recorder.control(kind, old_shape=list(old_shape),
+                         new_shape=list(new_shape),
+                         carried_requests=len(carried),
+                         downtime_s=round(downtime, 6))
     return {"report": report, "downtime_s": downtime,
             "carried_requests": len(carried)}

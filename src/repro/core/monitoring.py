@@ -26,6 +26,9 @@ class Monitor:
         self._timings = defaultdict(list)
         self._gauge_window = gauge_window
         self._gauges = defaultdict(lambda: deque(maxlen=gauge_window))
+        # cached append handle: one open() per Monitor lifetime, not one per
+        # event (opened lazily under the lock; close() releases it)
+        self._log_file = None
 
     def log(self, service: str, event: str, **fields):
         rec = {"t": time.time(), "service": service, "event": event, **fields}
@@ -33,9 +36,19 @@ class Monitor:
             self._events.append(rec)
             self._counters[(service, event)] += 1
             if self.log_path:
-                with self.log_path.open("a") as f:
-                    f.write(json.dumps(rec, default=str) + "\n")
+                if self._log_file is None:
+                    self._log_file = self.log_path.open("a")
+                self._log_file.write(json.dumps(rec, default=str) + "\n")
+                self._log_file.flush()
         return rec
+
+    def close(self):
+        """Release the cached log handle (VRE teardown). Idempotent; a
+        ``log`` after close simply reopens the file in append mode."""
+        with self._lock:
+            if self._log_file is not None:
+                self._log_file.close()
+                self._log_file = None
 
     def count(self, service: str, event: str, n: float = 1.0):
         with self._lock:

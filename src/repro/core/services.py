@@ -202,6 +202,34 @@ def build_server(ctx):
     slots_per_device = ctx.config.extra.get("slots_per_device")
     speculate = int(ctx.config.extra.get("speculate", 0) or 0)
     draft_kind = str(ctx.config.extra.get("draft", "ngram"))
+
+    recorder = None
+    record_path = ctx.config.extra.get("record_path")
+    if record_path:
+        from repro.observability import Recorder
+        # append mode: every re-instantiation (elastic resize, fleet
+        # preemption) re-stamps a meta header and keeps writing to the same
+        # file, so one store holds the request's whole multi-generation story
+        generation = int(getattr(ctx.vre, "generation", 0) or 0)
+        context = {"generation": generation}
+        arbiter = getattr(ctx.vre, "arbiter", None)
+        wait = getattr(arbiter, "_queue_wait_s", {}).get(ctx.config.name) \
+            if arbiter is not None else None
+        if wait is not None:
+            context["admission_wait_s"] = round(float(wait), 6)
+        recorder = Recorder(
+            record_path, tenant=ctx.config.name, monitor=ctx.monitor,
+            meta={"arch": ctx.config.arch or "yi-9b",
+                  "provider": ctx.config.provider,
+                  "generation": generation,
+                  "mesh_shape": list(ctx.config.mesh_shape),
+                  "serving": {"replicas": replicas_cfg, "slots": slots,
+                              "max_seq": max_seq,
+                              "chunk_tokens": chunk_tokens,
+                              "prefix_cache_mb": prefix_cache_mb,
+                              "speculate": speculate,
+                              "draft": draft_kind}},
+            context=context)
     # don't build drafts the engine would gate off anyway (rolling/SSM/MoE):
     # the engine still logs speculative_unsupported via its own check
     spec_supported = bool(speculate) and supports_speculation(model, max_seq)
@@ -232,13 +260,15 @@ def build_server(ctx):
                              monitor=ctx.monitor, devices=eng_devices,
                              chunk_tokens=chunk_tokens,
                              prefix_cache=prefix_cache,
-                             speculate=speculate, draft=draft)
+                             speculate=speculate, draft=draft,
+                             recorder=recorder)
 
     # the ReplicaSet partitions the VRE mesh into disjoint per-replica
     # slices, so "scale the mesh" genuinely changes the hardware replicas
     # occupy (not just thread counts)
     rs = ReplicaSet(factory, replicas=replicas, monitor=ctx.monitor,
-                    mesh=ctx.mesh, prefix_cache=prefix_cache)
+                    mesh=ctx.mesh, prefix_cache=prefix_cache,
+                    recorder=recorder)
     router = EdgeRouter(rs)
     autoscaler = None
     if ctx.config.extra.get("autoscale"):

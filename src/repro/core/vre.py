@@ -230,6 +230,9 @@ class VirtualResearchEnvironment:
         self.mesh = None
         self.state = "DESTROYED"
         self.monitor.log("vre", "destroyed")
+        # release the cached log handle; a later instantiate (elastic
+        # resize) transparently reopens it on the next event
+        self.monitor.close()
 
     # -- elastic scaling -----------------------------------------------------
     def resize(self, new_mesh_shape: tuple, state: Any = None,

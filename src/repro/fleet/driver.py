@@ -34,6 +34,7 @@ def fleet_vre_config(name: str, *, arch: str = "yi-9b",
                      replicas="auto", slots: int = 3, max_seq: int = 96,
                      slots_per_device: Optional[int] = None,
                      chunk_tokens: int = 0, prefix_cache_mb: float = 0.0,
+                     speculate: int = 0, record_path: Optional[str] = None,
                      extra: Optional[dict] = None):
     """A serving-plane VREConfig for fleet runs. ``replicas="auto"`` ties
     the replica count to the granted mesh (real accelerators: more devices,
@@ -50,6 +51,10 @@ def fleet_vre_config(name: str, *, arch: str = "yi-9b",
         cfg_extra["chunk_tokens"] = chunk_tokens
     if prefix_cache_mb:
         cfg_extra["prefix_cache_mb"] = prefix_cache_mb
+    if speculate:
+        cfg_extra["speculate"] = int(speculate)
+    if record_path:
+        cfg_extra["record_path"] = str(record_path)
     if extra:
         cfg_extra.update(extra)
     return VREConfig(name=name, mesh_shape=tuple(mesh_shape),
@@ -295,6 +300,8 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
                        shared_prefix_len: int = 48,
                        static: bool = False, endpoint_ttl_s: float = 30.0,
                        tick_interval_s: Optional[float] = None,
+                       speculate: int = 0,
+                       record_dir: Optional[str] = None,
                        rng=None) -> dict:
     """The benchmark scenario: ``n_vres`` same-pipeline tenants arrive one
     per phase over one shared pool and burst (a saturating Poisson wave) on
@@ -335,7 +342,10 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
         cfg = fleet_vre_config(
             f"vre{i}", arch=arch, workdir=workdir, mesh_shape=mesh,
             slots_per_device=slots_per_device, max_seq=max_seq,
-            chunk_tokens=chunk_tokens, prefix_cache_mb=prefix_cache_mb)
+            chunk_tokens=chunk_tokens, prefix_cache_mb=prefix_cache_mb,
+            speculate=speculate,
+            record_path=(f"{record_dir}/{f'vre{i}'}.jsonl"
+                         if record_dir else None))
         claim = ResourceClaim(min_devices=1, max_devices=pool,
                               priority=i)
         specs.append((cfg, claim))
@@ -356,4 +366,9 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
                 pass
     report["mode"] = "static" if static else "arbitrated"
     report["pool_devices"] = pool
+    if record_dir:
+        # releases above stopped every recorder, so the on-disk store is
+        # complete; fold its summary into the fleet report
+        from repro.observability import RecordStore
+        report["records"] = RecordStore.load(record_dir).summary()
     return report

@@ -141,6 +141,14 @@ def serve_report(reqs: List[Request], wall_s: float, rs: ReplicaSet,
         out["spec_tokens_per_step"] = counter("spec_emitted") / spec_steps
     if "prefix_cache" in m:
         out["prefix_cache"] = m["prefix_cache"]
+    recorder = getattr(rs, "recorder", None)
+    if recorder is not None:
+        # flush so the on-disk store already covers this wave, then fold a
+        # record-store summary into the serving contract
+        from repro.observability import RecordStore
+        recorder.flush()
+        out["records"] = {**recorder.summary(),
+                          **RecordStore.load(recorder.path).summary()}
     return out
 
 
@@ -171,7 +179,8 @@ def run_load(rs: ReplicaSet, prompts: List[np.ndarray], *, rate_rps: float,
 def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
                      monitor=None, mesh=None, chunk_tokens: int = 0,
                      prefix_cache_mb: float = 0.0, speculate: int = 0,
-                     draft: str = "ngram") -> ReplicaSet:
+                     draft: str = "ngram",
+                     record_path: Optional[str] = None) -> ReplicaSet:
     import jax
     from repro.configs import get_config, reduced as reduce_cfg
     from repro.models.model import build_model
@@ -186,6 +195,17 @@ def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
         prefix_cache = PrefixCache(chunk_tokens,
                                    budget_bytes=int(prefix_cache_mb * 2**20),
                                    monitor=monitor)
+    recorder = None
+    if record_path:
+        from repro.observability import Recorder
+        recorder = Recorder(
+            record_path, tenant=arch, monitor=monitor,
+            meta={"arch": arch, "provider": "cpu",
+                  "serving": {"replicas": replicas, "slots": slots,
+                              "max_seq": max_seq,
+                              "chunk_tokens": chunk_tokens,
+                              "prefix_cache_mb": prefix_cache_mb,
+                              "speculate": speculate, "draft": draft}})
     # skip draft construction where the engine would gate speculation off
     # (rolling/SSM/MoE archs): it would only allocate unused per-replica
     # state on every spawn; the engine still logs the fallback
@@ -199,10 +219,10 @@ def build_replicaset(arch: str, *, replicas: int, slots: int, max_seq: int,
                              name=f"replica{i}", monitor=monitor,
                              devices=devices, chunk_tokens=chunk_tokens,
                              prefix_cache=prefix_cache,
-                             speculate=speculate, draft=d)
+                             speculate=speculate, draft=d, recorder=recorder)
 
     return ReplicaSet(factory, replicas=replicas, monitor=monitor, mesh=mesh,
-                      prefix_cache=prefix_cache)
+                      prefix_cache=prefix_cache, recorder=recorder)
 
 
 def run_elastic_serve(vre, *, waves: int = 2, requests_per_wave: int = 16,
@@ -335,6 +355,9 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prompts share a prefix head of this many tokens "
                          "(0: independent prompts)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="flight recorder: write one JSONL record per "
+                         "request (enables per-request tracing)")
     args = ap.parse_args(argv)
     validate_serving_args(args, ap.error)
     args.chunk_tokens = args.chunk_tokens or 0
@@ -347,7 +370,8 @@ def main(argv=None):
                           monitor=monitor, chunk_tokens=args.chunk_tokens,
                           prefix_cache_mb=args.prefix_cache_mb,
                           speculate=args.speculate,
-                          draft=args.draft or "ngram")
+                          draft=args.draft or "ngram",
+                          record_path=args.record)
     vocab = rs.engines[0].cfg.vocab_size      # the (reduced) serving config
     rs.start()
     rng = np.random.default_rng(0)

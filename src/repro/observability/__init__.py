@@ -1,0 +1,22 @@
+"""Request-level flight recorder: distributed traces, a queryable record
+store, and trace replay as a benchmark mode.
+
+The paper ships an EFK monitoring stack as a first-class microservice
+concern; ``core/monitoring.py`` is its aggregate analogue. This package is
+the *per-request* half (the st4sd-datastore ``reporter`` analogue): every
+request carries a ``TraceContext`` of spans through gateway -> arbiter ->
+replica -> engine, a ``Recorder`` daemon persists one JSONL record per
+finished request to a queryable ``RecordStore``, and ``replay`` re-serves a
+recorded trace as a benchmark workload.
+"""
+from repro.observability.tracing import (NULL_TRACE, Span, TraceContext,
+                                         null_trace)
+from repro.observability.recorder import (Recorder, RecordStore,
+                                          format_span_tree)
+from repro.observability.replay import load_replay, replay_records
+
+__all__ = [
+    "NULL_TRACE", "Span", "TraceContext", "null_trace",
+    "Recorder", "RecordStore", "format_span_tree",
+    "load_replay", "replay_records",
+]

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.observability.tracing import NULL_TRACE, TraceContext, next_rid
+
 
 @dataclasses.dataclass
 class Request:
@@ -47,6 +49,10 @@ class Request:
     submit_t: float = dataclasses.field(default_factory=time.perf_counter)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    rid: int = dataclasses.field(default_factory=next_rid)
+    # NULL_TRACE when the flight recorder is off: every trace call site is
+    # an unconditional no-op method on the shared singleton
+    trace: object = NULL_TRACE
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -69,6 +75,12 @@ class Request:
         self.generated = []
         self.first_token_t = None
         self.retries += 1
+        # the re-queued request waits again: a failed-over record shows a
+        # second queue_wait span after the failover event (any phase span
+        # left open by the dead replica ends here)
+        self.trace.close("prefill")
+        self.trace.close("decode")
+        self.trace.open("queue_wait", retry=self.retries)
 
 
 def _padding_safe(model, max_seq: int) -> bool:
@@ -101,7 +113,8 @@ class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
                  name: str = "engine0", monitor=None, prefill_bucket: int = 16,
                  devices=None, chunk_tokens: Optional[int] = None,
-                 prefix_cache=None, speculate: int = 0, draft=None):
+                 prefix_cache=None, speculate: int = 0, draft=None,
+                 recorder=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -109,6 +122,9 @@ class ServingEngine:
         self.max_seq = max_seq
         self.name = name
         self.monitor = monitor
+        # flight recorder: an attached recorder implies tracing — requests
+        # get a TraceContext at submit and a JSONL record at completion
+        self.recorder = recorder
         self.prefill_bucket = max(1, prefill_bucket)
         self.chunk_tokens = int(chunk_tokens) if chunk_tokens else 0
         self.prefix_cache = prefix_cache
@@ -278,6 +294,11 @@ class ServingEngine:
             raise ValueError(f"prompt of {len(tokens)} tokens leaves no room "
                              f"to generate within max_seq={self.max_seq}")
         r = Request(tokens, max_new_tokens, eos_id)
+        if self.recorder is not None:
+            r.trace = TraceContext("request", rid=r.rid,
+                                   prompt_len=len(tokens),
+                                   max_new_tokens=max_new_tokens)
+            r.trace.open("queue_wait")
         self.queue.put(r)
         self.metrics["requests"] += 1
         self._wake.set()
@@ -306,6 +327,7 @@ class ServingEngine:
             maxlen = self._bucket_len(maxlen)
         toks = np.zeros((rows, maxlen), np.int32)
         for j, r in enumerate(grp):
+            r.trace.open("prefill", mode="batched", group=len(grp))
             toks[j, :len(r.tokens)] = r.tokens
         grp_cache = self._prefill(self.params, jnp.asarray(toks))
         slots_arr = jnp.asarray([r.slot for r in grp], jnp.int32)
@@ -318,6 +340,8 @@ class ServingEngine:
         for r in grp:
             self.pos[r.slot] = len(r.tokens) - 1
             self.active[r.slot] = r
+            r.trace.close("prefill", tokens=len(r.tokens))
+            r.trace.open("decode")
 
     def _admit(self):
         """Fill free slots from the queue: long prompts (and any prompt when
@@ -333,6 +357,7 @@ class ServingEngine:
             except queue.Empty:
                 break
             r.slot = slot
+            r.trace.close("queue_wait", replica=self.name, slot=slot)
             # chunked admission for prompts longer than one chunk, or ones a
             # prefix cache could serve (>= one chunk boundary); sub-chunk
             # prompts can neither hit nor seed the cache, so they keep the
@@ -373,6 +398,7 @@ class ServingEngine:
         deepest prefix-cache boundary first so only the uncovered tail is
         computed."""
         start = 0
+        span = r.trace.open("prefill", mode="chunked")
         if self.prefix_cache is not None:
             covered, entry = self.prefix_cache.lookup(r.tokens)
             if covered:
@@ -382,12 +408,15 @@ class ServingEngine:
                         np.int32(r.slot))
                     start = covered
                     self.metrics["prefix_hit_tokens"] += covered
+                    span.annotate(prefix_hit_tokens=covered)
+                    r.trace.event("prefix_cache_hit", tokens=covered)
                 except Exception as exc:
                     # a bad entry (e.g. adopted from an incompatible pool)
                     # must degrade to a miss — an unhandled raise here would
                     # strand the already-dequeued request forever and fail
                     # every other in-flight request via _fail_inflight
                     start = 0
+                    r.trace.event("prefix_restore_error")
                     if self.monitor is not None:
                         self.monitor.log(self.name, "prefix_restore_error",
                                          error=repr(exc), covered=covered)
@@ -398,6 +427,8 @@ class ServingEngine:
             # overwriting its cached K/V with identical values)
             self.pos[r.slot] = len(r.tokens) - 1
             self.metrics["prefill_requests"] += 1
+            r.trace.close("prefill", tokens=len(r.tokens))
+            r.trace.open("decode")
         else:
             self.pos[r.slot] = -1           # not decoding yet
             self._prefilling[r.slot] = start
@@ -483,6 +514,7 @@ class ServingEngine:
         c = self.chunk_tokens
         self.metrics["prefill_chunks"] += 1
         self.metrics["prefill_tokens"] += end - start
+        r.trace.event("chunk", start=start, end=end)
         if self.prefix_cache is not None and end % c == 0 \
                 and not self.prefix_cache.contains(r.tokens[:end]):
             # the cache stores per-chunk slices: offer only this
@@ -495,6 +527,8 @@ class ServingEngine:
             del self._prefilling[slot]
             self.pos[slot] = len(r.tokens) - 1       # ready for decode
             self.metrics["prefill_requests"] += 1
+            r.trace.close("prefill", tokens=len(r.tokens))
+            r.trace.open("decode")
         else:
             self._prefilling[slot] = end
 
@@ -554,6 +588,9 @@ class ServingEngine:
             self.metrics["completed"] += 1
             if self.monitor is not None:
                 self.monitor.gauge(self.name, "latency_s", r.latency_s)
+            r.trace.close("decode", tokens=len(r.generated))
+            if self.recorder is not None:
+                self.recorder.record(r, self)
             if not r.future.done():     # a detach may have failed the
                 r.future.set_result(    # future out from under a stuck
                     np.asarray(r.generated, np.int32))   # decode loop
@@ -616,6 +653,7 @@ class ServingEngine:
             while m < k and toks[i, m + 1] == greedy[i, m]:   # own greedy
                 m += 1                                        # choice g_j
             accepted += m
+            r.trace.event("verify", proposed=k, accepted=m)
             # emit g_0..g_m: the m accepted candidates plus the correction
             # (m < k) or bonus (m == k) token; the stop conditions run
             # per-token, so EOS / budget / seq-limit truncate mid-chain

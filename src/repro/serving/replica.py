@@ -53,11 +53,15 @@ class ReplicaSet:
                  monitor=None, heartbeat_timeout: float = 30.0,
                  check_interval: float = 0.05, respawn: bool = False,
                  mesh=None, devices: Optional[Sequence] = None,
-                 prefix_cache=None):
+                 prefix_cache=None, recorder=None):
         assert replicas >= 1
         self.factory = factory
         self.name = name
         self.monitor = monitor
+        # the flight recorder (shared by every engine via the factory
+        # closure); held here so stop() flushes it and serve_report /
+        # elastic resize can reach it through the pool
+        self.recorder = recorder
         # the shared cross-replica prefix cache (engines get it via the
         # factory closure); held here so detach/adopt can carry it to a
         # successor pool across an elastic mesh resize
@@ -164,6 +168,8 @@ class ReplicaSet:
                         r.future.set_exception(
                             RuntimeError(f"{self.name} stopped with the "
                                          f"request still queued"))
+        if self.recorder is not None:
+            self.recorder.stop()        # idempotent; flushes queued records
 
     # -- dispatch ----------------------------------------------------------
     def healthy_engines(self) -> List[ServingEngine]:
@@ -234,6 +240,7 @@ class ReplicaSet:
             requeued = engine.harvest_requests()
         kept = []
         for r in requeued:
+            r.trace.event("failover", replica=engine.name)
             if r.retries > max_retries:     # poisoned request: stop bouncing
                 r.future.set_exception(RuntimeError(
                     f"request failed over {r.retries} times"))
@@ -253,6 +260,7 @@ class ReplicaSet:
                         f"no healthy replicas for {why}"))
                     continue
                 eng = min(pool, key=lambda e: e.load)
+                r.trace.event("requeued", why=why, to=eng.name)
                 eng.queue.put(r)
                 eng.metrics["requests"] += 1
                 eng._wake.set()
@@ -379,12 +387,17 @@ class ReplicaSet:
                     r.future.set_exception(RuntimeError(
                         f"{e.name} unresponsive during detach with the "
                         f"request in flight"))
+        for r in out:
+            r.trace.event("detached", pool=self.name)
         return out
 
     def adopt(self, requests: List[Request], why: str = "resize"):
         """Accept requests harvested off a predecessor pool (their futures
         stay attached, so original waiters see the results)."""
-        self._requeue(list(requests), why)
+        requests = list(requests)
+        for r in requests:
+            r.trace.event("adopted", pool=self.name)
+        self._requeue(requests, why)
 
     def adopt_prefix_cache(self, predecessor) -> int:
         """Carry a predecessor pool's prefix-cache entries into this pool's

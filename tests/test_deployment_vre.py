@@ -42,8 +42,13 @@ def test_decentralized_beats_centralized(tmp_path):
     dec = DecentralizedDeployer(ImageCache(str(tmp_path)), rtt_s=0.02)
     cen = CentralizedDeployer(rtt_s=0.02, pushes_per_node=2)
     n = 16
-    r_dec = dec.deploy(n, ctx)
-    r_cen = cen.deploy(n, ctx)
+    # best-of-3 walls: the decentralized deploy's parallel threads are the
+    # noise-sensitive side on a loaded host (same noise control as the
+    # serving benches); the modeled-network comparison is deterministic
+    r_dec = min((dec.deploy(n, ctx) for _ in range(3)),
+                key=lambda r: r.wall_s)
+    r_cen = min((cen.deploy(n, ctx) for _ in range(3)),
+                key=lambda r: r.wall_s)
     assert r_dec.wall_s < r_cen.wall_s / 2
     assert r_cen.modeled_network_s > r_dec.modeled_network_s
 

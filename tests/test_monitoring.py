@@ -1,0 +1,138 @@
+"""Monitor unit tests: gauge_stats windowing edge cases, concurrent gauge
+writers, and the cached append log handle + close() lifecycle."""
+import json
+import threading
+import time
+
+from repro.core.monitoring import Monitor
+
+
+class TestGaugeStats:
+    def test_empty_gauge(self):
+        m = Monitor()
+        stats = m.gauge_stats("svc", "depth")
+        assert stats == {"n": 0, "last": None, "mean": None, "p50": None,
+                         "p95": None}
+
+    def test_empty_window(self):
+        # samples exist but all fall outside the trailing window
+        m = Monitor()
+        m.gauge("svc", "depth", 3.0)
+        time.sleep(0.05)
+        stats = m.gauge_stats("svc", "depth", window_s=0.01)
+        assert stats["n"] == 0 and stats["last"] is None
+
+    def test_single_sample(self):
+        m = Monitor()
+        m.gauge("svc", "depth", 7.0)
+        stats = m.gauge_stats("svc", "depth")
+        assert stats["n"] == 1
+        assert stats["last"] == stats["mean"] == stats["p50"] \
+            == stats["p95"] == 7.0
+
+    def test_window_keeps_recent_drops_old(self):
+        m = Monitor()
+        m.gauge("svc", "depth", 1.0)
+        time.sleep(0.15)
+        m.gauge("svc", "depth", 9.0)
+        recent = m.gauge_stats("svc", "depth", window_s=0.1)
+        assert recent["n"] == 1 and recent["last"] == 9.0
+        full = m.gauge_stats("svc", "depth")
+        assert full["n"] == 2 and full["mean"] == 5.0
+
+    def test_window_larger_than_history(self):
+        m = Monitor()
+        for v in (1.0, 2.0, 3.0):
+            m.gauge("svc", "depth", v)
+        assert m.gauge_stats("svc", "depth", window_s=3600)["n"] == 3
+
+    def test_ring_eviction(self):
+        m = Monitor(gauge_window=4)
+        for v in range(10):
+            m.gauge("svc", "depth", float(v))
+        stats = m.gauge_stats("svc", "depth")
+        assert stats["n"] == 4 and stats["last"] == 9.0
+        assert min(v for _, v in m._gauges[("svc", "depth")]) == 6.0
+
+    def test_clock_ordering_monotonic(self):
+        # samples are stamped with time.monotonic(): timestamps never run
+        # backwards, so the "last" sample is always the newest write
+        m = Monitor()
+        for v in range(50):
+            m.gauge("svc", "depth", float(v))
+        ts = [t for t, _ in m._gauges[("svc", "depth")]]
+        assert ts == sorted(ts)
+        assert m.gauge_last("svc", "depth") == 49.0
+
+    def test_concurrent_gauge_writers(self):
+        m = Monitor(gauge_window=100_000)
+        n_threads, n_each = 8, 500
+
+        def writer(tid):
+            for i in range(n_each):
+                m.gauge("svc", "depth", float(tid * n_each + i))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = m.gauge_stats("svc", "depth")
+        assert stats["n"] == n_threads * n_each
+        vals = {v for _, v in m._gauges[("svc", "depth")]}
+        assert len(vals) == n_threads * n_each  # no write lost or mangled
+
+    def test_concurrent_writers_distinct_gauges(self):
+        m = Monitor()
+        def writer(name):
+            for i in range(300):
+                m.gauge("svc", name, float(i))
+        threads = [threading.Thread(target=writer, args=(f"g{t}",))
+                   for t in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for t in range(6):
+            assert m.gauge_last("svc", f"g{t}") == 299.0
+
+
+class TestLogHandle:
+    def test_log_caches_handle_and_appends(self, tmp_path):
+        path = tmp_path / "events.jsonl"
+        m = Monitor(log_path=str(path))
+        assert m._log_file is None          # opened lazily, not in __init__
+        m.log("svc", "one")
+        handle = m._log_file
+        assert handle is not None
+        m.log("svc", "two")
+        assert m._log_file is handle        # same handle reused
+        lines = [json.loads(l) for l in path.read_text().splitlines()]
+        assert [l["event"] for l in lines] == ["one", "two"]
+
+    def test_close_idempotent_and_reopens(self, tmp_path):
+        path = tmp_path / "events.jsonl"
+        m = Monitor(log_path=str(path))
+        m.log("svc", "before")
+        m.close()
+        assert m._log_file is None
+        m.close()                           # second close is a no-op
+        m.log("svc", "after")               # reopens in append mode
+        assert m._log_file is not None
+        events = [json.loads(l)["event"] for l in path.read_text().splitlines()]
+        assert events == ["before", "after"]
+        m.close()
+
+    def test_close_without_log_path(self):
+        Monitor().close()                   # no file -> harmless
+
+    def test_vre_teardown_closes_handle(self, tmp_path):
+        from repro.core.vre import VirtualResearchEnvironment, VREConfig
+        vre = VirtualResearchEnvironment(
+            VREConfig(name="t", workdir=str(tmp_path / "wd")))
+        vre.instantiate()
+        vre.monitor.log("svc", "x")
+        assert vre.monitor._log_file is not None
+        vre.destroy()
+        assert vre.monitor._log_file is None

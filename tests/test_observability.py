@@ -1,0 +1,359 @@
+"""Flight-recorder tests: span/trace semantics, the async reporter daemon
+and record store, trace replay, engine integration, and (slow) the
+fleet-preemption acceptance scenario — a disrupted request whose span tree
+shows the whole story."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import run_devices
+from repro.observability import (NULL_TRACE, Recorder, RecordStore,
+                                 TraceContext, format_span_tree, load_replay,
+                                 replay_records)
+from repro.observability.recorder import build_record
+
+
+class TestTracing:
+    def test_span_tree_shape(self):
+        ctx = TraceContext("request", rid=1)
+        ctx.open("queue_wait")
+        ctx.close("queue_wait", slot=0)
+        ctx.open("prefill", mode="chunked")
+        ctx.event("chunk", start=0, end=16)
+        ctx.close("prefill", tokens=32)
+        ctx.open("decode")
+        ctx.event("verify", proposed=3, accepted=2)
+        ctx.close("decode")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        assert [c["name"] for c in d["children"]] \
+            == ["queue_wait", "prefill", "decode"]
+        prefill = d["children"][1]
+        assert prefill["attrs"]["mode"] == "chunked"
+        assert prefill["attrs"]["tokens"] == 32
+        assert prefill["events"][0]["name"] == "chunk"
+        assert d["children"][2]["events"][0]["attrs"]["accepted"] == 2
+
+    def test_event_outside_open_span_lands_on_root(self):
+        ctx = TraceContext("request")
+        ctx.event("detached", pool="p")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        assert d["events"][0]["name"] == "detached"
+
+    def test_reopen_same_name_after_close(self):
+        # the retry path: queue_wait -> prefill -> (requeue) -> queue_wait
+        ctx = TraceContext("request")
+        ctx.open("queue_wait")
+        ctx.close("queue_wait")
+        ctx.open("queue_wait", retry=1)
+        ctx.event("requeued", why="resize")
+        ctx.close("queue_wait")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        waits = [c for c in d["children"] if c["name"] == "queue_wait"]
+        assert len(waits) == 2
+        assert waits[1]["attrs"]["retry"] == 1
+        assert waits[1]["events"][0]["name"] == "requeued"
+
+    def test_durations_monotonic(self):
+        ctx = TraceContext("request")
+        ctx.open("work")
+        time.sleep(0.01)
+        ctx.close("work")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        assert d["children"][0]["duration_s"] >= 0.01
+        assert d["duration_s"] >= d["children"][0]["duration_s"]
+
+    def test_finish_closes_dangling_spans(self):
+        ctx = TraceContext("request")
+        ctx.open("prefill")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        assert d["children"][0].get("duration_s") is not None
+
+    def test_null_trace_is_inert_singleton(self):
+        assert NULL_TRACE.enabled is False
+        assert NULL_TRACE.open("x", a=1) is NULL_TRACE
+        NULL_TRACE.close("x")               # no-ops, no state
+        NULL_TRACE.event("y")
+        assert NULL_TRACE.finish() is NULL_TRACE
+        assert NULL_TRACE.root is None
+
+    def test_thread_safety(self):
+        ctx = TraceContext("request")
+        ctx.open("decode")
+        def emit():
+            for i in range(200):
+                ctx.event("tick", i=i)
+        threads = [threading.Thread(target=emit) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        ctx.close("decode")
+        ctx.finish()
+        d = ctx.root.to_dict(ctx.root.t0)
+        assert len(d["children"][0]["events"]) == 800
+
+
+class _FakeEngine:
+    name = "replica0"
+    devices = ()
+
+
+def _fake_request(rid=1, tokens=(5, 6, 7), generated=(8, 9)):
+    class R:
+        pass
+    r = R()
+    r.rid = rid
+    r.tokens = np.asarray(tokens, np.int32)
+    r.prompt_len = len(tokens)
+    r.generated = list(generated)
+    r.max_new_tokens = 8
+    r.eos_id = -1
+    r.retries = 0
+    r.submit_t = time.perf_counter()
+    r.ttft_s = 0.01
+    r.latency_s = 0.02
+    r.trace = TraceContext("request", rid=rid, prompt_len=len(tokens),
+                           max_new_tokens=8)
+    r.trace.open("queue_wait")
+    r.trace.close("queue_wait", slot=0)
+    span = r.trace.open("prefill", mode="chunked")
+    span.annotate(prefix_hit_tokens=2)
+    r.trace.event("prefix_cache_hit", tokens=2)
+    r.trace.event("chunk", start=2, end=len(tokens))
+    r.trace.close("prefill", tokens=len(tokens))
+    r.trace.open("decode")
+    r.trace.event("verify", proposed=3, accepted=2)
+    r.trace.event("preemption", old_shape=[4, 1], new_shape=[2, 1])
+    r.trace.close("decode", tokens=len(generated))
+    return r
+
+
+class TestRecorder:
+    def test_roundtrip_and_store(self, tmp_path):
+        path = tmp_path / "rec.jsonl"
+        rec = Recorder(str(path), tenant="t0", meta={"arch": "toy"})
+        rec.record(_fake_request(rid=1), _FakeEngine())
+        rec.record(_fake_request(rid=2), _FakeEngine())
+        rec.control("resize", old_shape=[4, 1], new_shape=[2, 1])
+        rec.stop()
+        # meta header + 2 requests + 1 control
+        assert rec.summary()["written"] == 4 and rec.summary()["dropped"] == 0
+        store = RecordStore.load(str(path))
+        assert store.meta["arch"] == "toy"
+        assert len(store.records) == 2 and len(store.controls) == 1
+        r = store.query(rid=1)[0]
+        assert r["tenant"] == "t0"
+        assert r["counters"]["prefix_hit_tokens"] == 2
+        assert r["counters"]["spec_accepted"] == 2
+        assert r["counters"]["prefill_chunks"] == 1
+        assert r["disruptions"][0]["event"] == "preemption"
+        assert r["disruptions"][0]["attrs"]["new_shape"] == [2, 1]
+        assert store.query(disrupted=True) == store.records
+
+    def test_timings_from_spans(self, tmp_path):
+        path = tmp_path / "rec.jsonl"
+        rec = Recorder(str(path), meta={})
+        r = _fake_request()
+        record = build_record(r, _FakeEngine(), rec)
+        rec.stop()
+        t = record["timings"]
+        assert t["queue_wait_s"] >= 0
+        assert t["prefill_s"] >= 0 and t["decode_s"] >= 0
+        assert record["prompt_tokens"] == [5, 6, 7]
+        assert record["generated_tokens"] == [8, 9]
+
+    def test_drop_counting_after_stop(self, tmp_path):
+        rec = Recorder(str(tmp_path / "rec.jsonl"), meta={})
+        rec.stop()
+        rec.record(_fake_request(), _FakeEngine())
+        assert rec.summary()["dropped"] == 1
+
+    def test_stop_idempotent(self, tmp_path):
+        rec = Recorder(str(tmp_path / "rec.jsonl"), meta={})
+        rec.stop()
+        rec.stop()
+
+    def test_append_mode_remeta(self, tmp_path):
+        # a resize re-creates the recorder on the same path; the store
+        # keeps the LAST meta header (the live plane's shape)
+        path = str(tmp_path / "rec.jsonl")
+        rec1 = Recorder(path, meta={"generation": 1})
+        rec1.record(_fake_request(rid=1), _FakeEngine())
+        rec1.stop()
+        rec2 = Recorder(path, meta={"generation": 2})
+        rec2.record(_fake_request(rid=2), _FakeEngine())
+        rec2.stop()
+        store = RecordStore.load(path)
+        assert store.meta["generation"] == 2
+        assert [r["rid"] for r in store.records] == [1, 2]
+
+    def test_store_load_directory_and_filters(self, tmp_path):
+        for i, tenant in enumerate(("a", "b")):
+            rec = Recorder(str(tmp_path / f"vre{i}.jsonl"), tenant=tenant,
+                           meta={})
+            rec.record(_fake_request(rid=i), _FakeEngine())
+            rec.stop()
+        store = RecordStore.load(str(tmp_path))
+        assert store.tenants() == ["a", "b"]
+        assert [r["rid"] for r in store.query(tenant="b")] == [1]
+        s = store.summary()
+        assert s["records"] == 2 and s["disrupted"] == 2
+
+    def test_percentiles(self, tmp_path):
+        rec = Recorder(str(tmp_path / "r.jsonl"), meta={})
+        for i in range(4):
+            rec.record(_fake_request(rid=i), _FakeEngine())
+        rec.stop()
+        store = RecordStore.load(str(rec.path))
+        p = store.percentiles("timings.latency_s")
+        assert p["n"] == 4 and p["p50"] > 0
+
+    def test_format_span_tree(self, tmp_path):
+        rec = Recorder(str(tmp_path / "r.jsonl"), tenant="t", meta={})
+        rec.record(_fake_request(rid=9), _FakeEngine())
+        rec.stop()
+        record = RecordStore.load(str(rec.path)).records[0]
+        text = format_span_tree(record)
+        assert "rid=9" in text
+        assert "queue_wait" in text and "prefill" in text
+        assert "prefix_cache_hit" in text and "verify" in text
+
+
+class TestEngineIntegration:
+    @pytest.fixture(scope="class")
+    def served(self, tmp_path_factory):
+        import jax
+        from repro.configs import get_config, reduced
+        from repro.models.model import build_model
+        from repro.serving.engine import ServingEngine
+
+        path = str(tmp_path_factory.mktemp("rec") / "engine.jsonl")
+        cfg = reduced(get_config("yi-9b"))
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        rec = Recorder(path, tenant="unit", meta={"arch": "yi-9b"})
+        eng = ServingEngine(model, params, slots=2, max_seq=64,
+                            name="unit", recorder=rec)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (6, 9)]
+        futs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run_until_idle()
+        outs = [f.result(timeout=60) for f in futs]
+        rec.stop()
+        return path, prompts, outs
+
+    def test_records_written(self, served):
+        path, prompts, outs = served
+        store = RecordStore.load(path)
+        assert len(store.records) == len(prompts)
+        for rec_ in store.records:
+            names = [c["name"] for c in rec_["trace"]["children"]]
+            assert names[:3] == ["queue_wait", "prefill", "decode"]
+            assert rec_["timings"]["latency_s"] > 0
+            assert len(rec_["generated_tokens"]) == 4
+
+    def test_disabled_engine_has_null_trace(self):
+        from repro.serving.engine import Request
+        r = Request(np.asarray([1, 2], np.int32), 4, -1)
+        assert r.trace is NULL_TRACE
+
+    def test_replay_token_parity(self, served):
+        import jax
+        from repro.configs import get_config, reduced
+        from repro.models.model import build_model
+        from repro.serving.engine import ServingEngine
+
+        path, _prompts, _outs = served
+        meta, records = load_replay(path)
+        assert meta["arch"] == "yi-9b"
+        cfg = reduced(get_config("yi-9b"))
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(model, params, slots=2, max_seq=64)
+        stop = threading.Event()
+
+        def drive():
+            while not stop.is_set():
+                eng.step()
+                time.sleep(0.001)
+        pump = threading.Thread(target=drive, daemon=True)
+        pump.start()
+        try:
+            rep = replay_records(records, eng.submit_request, speed=100.0)
+        finally:
+            stop.set()
+            pump.join(timeout=10)
+        assert rep["token_parity"] == 1.0
+        assert rep["mismatches"] == 0
+        assert rep["requests"] == len(records)
+
+
+@pytest.mark.slow
+class TestFleetAcceptance:
+    def test_preempted_request_story(self, tmp_path):
+        """The ISSUE acceptance scenario: a fleet run under admission
+        pressure yields a queryable store where a disrupted request's span
+        tree shows queue wait, chunked prefill with a prefix-cache hit, a
+        speculative accept count, and the preemption/adopt it survived —
+        and the recorded trace replays with token parity."""
+        out = run_devices(f"""
+            import json
+            from repro.fleet.driver import run_fleet_scenario
+            from repro.observability import RecordStore
+
+            rep = run_fleet_scenario(
+                3, workdir={str(tmp_path / 'wd')!r},
+                requests_per_phase=12, rate_rps=400.0, max_new_tokens=16,
+                slots_per_device=2, wave_repeats=1, chunk_tokens=16,
+                prefix_cache_mb=16.0, shared_prefix_len=48, speculate=3,
+                record_dir={str(tmp_path / 'rec')!r})
+            store = RecordStore.load({str(tmp_path / 'rec')!r})
+            hit = None
+            for r in store.query(disrupted=True):
+                c = r["counters"]
+                disrupted_kinds = {{d["event"] for d in r["disruptions"]}}
+                if (r["timings"]["queue_wait_s"] > 0
+                        and c["prefill_chunks"] >= 1
+                        and c["prefix_hit_tokens"] > 0
+                        and c["spec_accepted"] > 0
+                        and disrupted_kinds & {{"preemption", "adopted"}}):
+                    hit = r
+                    break
+            assert hit is not None, (
+                "no disrupted request shows the full story; disrupted=%d"
+                % len(store.query(disrupted=True)))
+            assert len(hit["generated_tokens"]) == hit["new_tokens"]
+            assert store.controls, "no control record for the preemption"
+            print(json.dumps({{"rid": hit["rid"],
+                               "records": len(store.records)}}))
+
+            # replay one tenant's file: token parity end to end
+            from repro.observability import load_replay, replay_records
+            from repro.launch.serve import build_replicaset
+            meta, records = load_replay({str(tmp_path / 'rec')!r}
+                                        + "/vre1.jsonl")
+            s = meta["serving"]
+            rs = build_replicaset(meta["arch"], replicas=1,
+                                  slots=int(s["slots"]),
+                                  max_seq=int(s["max_seq"]),
+                                  chunk_tokens=int(s["chunk_tokens"]),
+                                  speculate=int(s["speculate"]))
+            rs.start()
+            try:
+                rep2 = replay_records(records, rs.submit_request,
+                                      speed=50.0)
+            finally:
+                rs.stop()
+            assert rep2["token_parity"] == 1.0, rep2["mismatches"]
+            print("REPLAY_OK", rep2["requests"])
+        """, n_devices=8, timeout=900)
+        assert "REPLAY_OK" in out

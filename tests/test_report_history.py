@@ -74,3 +74,68 @@ def test_cli_writes_pages(tmp_path):
     assert "# Bench history" in out_md.read_text()
     assert report_history.main(["--dir", str(tmp_path / "empty_missing")]) \
         == 1
+
+
+def _baseline_file(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"min_metrics": {
+        "tok_per_s": 100.0,                                 # default 30% tol
+        "speculative.speedup": {"floor": 2.0, "tolerance": 0.0},
+    }}))
+    return str(path)
+
+
+def test_baseline_annotations(tmp_path):
+    baseline = report_history.load_baseline(_baseline_file(tmp_path))
+    assert baseline["tok_per_s"] == (100.0, 0.30)
+    assert baseline["speculative.speedup"] == (2.0, 0.0)
+    # same floor arithmetic as bench_serving --check-baseline
+    assert report_history.baseline_status("tok_per_s", 71.0, baseline) \
+        == ("ok", 70.0)
+    assert report_history.baseline_status("tok_per_s", 69.0, baseline) \
+        == ("regression", 70.0)
+    assert report_history.baseline_status("ungated", 1.0, baseline) is None
+
+    _artifact(tmp_path, "run0", "2026-08-01T00:00:00Z", "d" * 40,
+              tok_per_s=50.0, speculative={"speedup": 3.0})
+    runs = report_history.load_artifacts(str(tmp_path))
+    md = report_history.render_markdown(runs, baseline=baseline)
+    assert "REGRESSION" in md and "floor 70" in md
+    html_page = report_history.render_html(runs, baseline=baseline)
+    assert "REGRESSION" in html_page and "floor 2 <b>ok</b>" in html_page
+
+
+def _record_file(tmp_path, name="rec.jsonl"):
+    path = tmp_path / name
+    lines = [{"kind": "meta", "arch": "toy"},
+             {"kind": "request", "rid": 1, "tenant": "a", "arrival_s": 0.1,
+              "timings": {"ttft_s": 0.02, "latency_s": 0.05},
+              "disruptions": []},
+             {"kind": "control", "event": "resize"},
+             {"kind": "request", "rid": 2, "tenant": "b", "arrival_s": 0.4,
+              "timings": {"ttft_s": 0.3, "latency_s": 0.9},
+              "disruptions": [{"event": "preemption"}]}]
+    path.write_text("\n".join(json.dumps(l) for l in lines) + "\n")
+    return str(path)
+
+
+def test_records_mode(tmp_path):
+    path = _record_file(tmp_path)
+    records = report_history.load_records([path])
+    assert [r["rid"] for r in records] == [1, 2]   # meta/control skipped
+    pts = report_history._record_points(records, "latency_s")
+    assert pts == [(0.1, 0.05, False), (0.4, 0.9, True)]
+    html_page = report_history.render_records_html(records)
+    assert "<svg" in html_page and "1 disrupted" in html_page
+    assert "#c0392b" in html_page                  # disrupted point is red
+    md = report_history.render_records_markdown(records)
+    assert "2 requests" in md and "## TTFT" in md
+
+    out_html = tmp_path / "records.html"
+    rc = report_history.main(["--records", str(tmp_path),   # dir form
+                              "--out-html", str(out_html)])
+    assert rc == 0 and "<svg" in out_html.read_text()
+    # --dir and --records are mutually exclusive
+    assert report_history.main(["--dir", str(tmp_path),
+                                "--records", path]) == 2
+    assert report_history.main([]) == 2

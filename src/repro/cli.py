@@ -124,7 +124,17 @@ def cmd_serve(args):
     if args.record:
         vre.config.extra["record_path"] = args.record
     vre.instantiate()
+    telemetry = None
     try:
+        if args.telemetry_port is not None:
+            from repro.observability import vre_telemetry
+            server = vre.service("lm-server")
+            telemetry = vre_telemetry(
+                vre, port=args.telemetry_port,
+                slo=getattr(server.autoscaler, "slo", None)
+                if server.autoscaler is not None else None)
+            print(f"telemetry: {telemetry.url}/metrics "
+                  f"{telemetry.url}/healthz", file=sys.stderr)
         rng = np.random.default_rng(args.seed)
         if args.waves > 1:
             report = run_elastic_serve(
@@ -138,8 +148,13 @@ def cmd_serve(args):
                                    rs.engines[0].cfg.vocab_size, rng)
             report = run_load(rs, prompts, rate_rps=args.rate,
                               max_new_tokens=args.max_new, rng=rng)
+        if telemetry is not None:
+            report["telemetry"] = {"url": telemetry.url,
+                                   "scrapes": telemetry.scrapes}
         print(json.dumps(report, indent=2))
     finally:
+        if telemetry is not None:
+            telemetry.stop()
         vre.destroy()
 
 
@@ -181,6 +196,7 @@ def cmd_fleet(args):
         tick_interval_s=tick_interval or None,
         speculate=args.speculate or 0,
         record_dir=args.record_dir,
+        telemetry_port=args.telemetry_port,
         rng=np.random.default_rng(args.seed))
     print(json.dumps(report, indent=2))
     return report
@@ -194,7 +210,6 @@ def cmd_trace(args):
     store = RecordStore.load(*args.records)
     if not len(store) and not store.controls:
         sys.exit(f"trace: no records found under {args.records}")
-    print(json.dumps(store.summary(), indent=2))
     matches = store.query(tenant=args.tenant, rid=args.rid,
                           since_s=args.since, until_s=args.until,
                           disrupted=True if args.disrupted else None)
@@ -205,6 +220,16 @@ def cmd_trace(args):
                                         r.get("timings", {}).get("latency_s")
                                         or 0.0),
                          reverse=True)
+    if args.json:
+        # machine-readable mode: one JSON document — summary + the raw
+        # matched records (span trees and all) — so dashboards and tests
+        # consume structure instead of scraping the ASCII renderer
+        print(json.dumps({"summary": store.summary(),
+                          "matched": len(matches),
+                          "records": matches[:args.limit]},
+                         indent=2, default=str))
+        return store
+    print(json.dumps(store.summary(), indent=2))
     for rec in matches[:args.limit]:
         print()
         print(format_span_tree(rec))
@@ -273,6 +298,10 @@ def main(argv=None):
     p.add_argument("--record", default=None, metavar="PATH",
                    help="flight recorder: one JSONL record per request "
                         "(inspect with `python -m repro.cli trace`)")
+    p.add_argument("--telemetry-port", type=int, default=None, metavar="N",
+                   help="serve live /metrics + /healthz + /vre/<name>/* on "
+                        "this port for the duration of the run (0 picks an "
+                        "ephemeral port, printed to stderr)")
     p.set_defaults(fn=cmd_serve)
     p = sub.add_parser(
         "fleet",
@@ -314,6 +343,10 @@ def main(argv=None):
                    help="flight recorder: one JSONL record file per VRE "
                         "under DIR (inspect with `python -m repro.cli "
                         "trace --records DIR`)")
+    p.add_argument("--telemetry-port", type=int, default=None, metavar="N",
+                   help="serve fleet-wide /metrics + /healthz + /vres on "
+                        "this port for the duration of the run (0 picks an "
+                        "ephemeral port)")
     p.add_argument("--workdir", default="/tmp/fleet")
     p.set_defaults(fn=cmd_fleet)
     p = sub.add_parser(
@@ -335,6 +368,10 @@ def main(argv=None):
                         "event (failover/preemption/resize)")
     p.add_argument("--limit", type=int, default=5,
                    help="span trees to print (default 5)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable output: one JSON document with "
+                        "the summary and the matched raw records instead "
+                        "of ASCII span trees")
     p.set_defaults(fn=cmd_trace)
     p = sub.add_parser("destroy")
     p.add_argument("--dir", required=True)

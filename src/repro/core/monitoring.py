@@ -91,6 +91,18 @@ class Monitor:
                 "p50": vals[n // 2], "p95": vals[min(n - 1,
                                                      int(0.95 * n))]}
 
+    def gauge_samples(self, service: str, name: str,
+                      window_s: Optional[float] = None) -> list:
+        """Raw gauge values in the retained (optionally trailing) window —
+        the SLO engine needs the distribution (fraction over objective),
+        not just the percentiles ``gauge_stats`` precomputes."""
+        with self._lock:
+            pts = list(self._gauges.get((service, name), ()))
+        if window_s is not None:
+            cutoff = time.monotonic() - window_s
+            pts = [p for p in pts if p[0] >= cutoff]
+        return [v for _, v in pts]
+
     def gauge_last(self, service: str, name: str):
         """Newest sample of a gauge, or None if never recorded — the cheap
         read path for monotonic gauges (prefix-cache hit/miss/eviction

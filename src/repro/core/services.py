@@ -280,9 +280,22 @@ def build_server(ctx):
                 float(ctx.config.extra["scale_up_prefill_tokens"])
                 if ctx.config.extra.get("scale_up_prefill_tokens") is not None
                 else None))
+        slo_engine = None
+        slo_cfg = ctx.config.extra.get("slo")
+        if isinstance(slo_cfg, dict) and slo_cfg:
+            # declarative SLO targets ride the autoscaler: error-budget burn
+            # becomes a growth trigger alongside raw load, and the burn rate
+            # travels with resize proposals into the arbiter
+            from repro.observability.slo import SLOEngine, targets_from_config
+            slo_engine = SLOEngine(
+                ctx.monitor, targets_from_config(slo_cfg),
+                services=lambda: [e.name for e in rs.engines],
+                burn_threshold=float(slo_cfg.get("burn_threshold", 1.0)),
+                name=f"{ctx.config.name}-slo")
         autoscaler = Autoscaler(rs, ctx.monitor, as_cfg,
                                 resize_mesh=getattr(ctx.vre, "request_resize",
-                                                    None))
+                                                    None),
+                                slo=slo_engine)
     return ServingService(rs, router, autoscaler)
 
 

@@ -193,7 +193,8 @@ class VirtualResearchEnvironment:
             return size
         raise TypeError(f"service {name!r} has no lifecycle handle")
 
-    def request_resize(self, new_mesh_shape: Optional[tuple] = None):
+    def request_resize(self, new_mesh_shape: Optional[tuple] = None,
+                       pressure: Optional[float] = None):
         """Mark the mesh as saturated (autoscaler hook). ``resize`` is
         destructive — it checkpoints and re-instantiates — so the request is
         recorded for the driver to apply at a safe point rather than ripping
@@ -209,7 +210,8 @@ class VirtualResearchEnvironment:
             new_mesh_shape = (d * 2, *rest)
         if self.arbiter is not None:
             return self.arbiter.propose_resize(self.config.name,
-                                               tuple(new_mesh_shape))
+                                               tuple(new_mesh_shape),
+                                               pressure=pressure)
         self.pending_resize = tuple(new_mesh_shape)
         self.monitor.log("vre", "resize_requested",
                          old=list(self.config.mesh_shape),

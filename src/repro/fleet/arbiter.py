@@ -115,6 +115,9 @@ class FleetArbiter:
         self._queue: List[_Queued] = []
         self._deferred: Dict[str, tuple] = {}   # name -> wanted mesh shape
         self._queue_wait_s: Dict[str, float] = {}
+        # last SLO burn-rate each tenant reported with a proposal: deferred
+        # re-evaluation tiebreaker + telemetry surface
+        self._pressure: Dict[str, float] = {}
         self._prefix_caches: Dict[tuple, object] = {}
         self._order = 0
         self.admissions = 0
@@ -157,6 +160,13 @@ class FleetArbiter:
     def vre(self, name: str):
         with self._lock:
             return self._vres.get(name)
+
+    def vres(self) -> List:
+        """Live admitted VREs (snapshot) — the telemetry plane walks this
+        per scrape, so tenants appear/disappear from /metrics with
+        admission and release."""
+        with self._lock:
+            return list(self._vres.values())
 
     def cap_shape(self, name: str) -> tuple:
         """The largest mesh shape ``name``'s claim allows — the natural
@@ -258,7 +268,8 @@ class FleetArbiter:
 
     # -- proposals ---------------------------------------------------------
     def propose_resize(self, name: str,
-                       new_mesh_shape: Optional[tuple] = None) -> dict:
+                       new_mesh_shape: Optional[tuple] = None,
+                       pressure: Optional[float] = None) -> dict:
         """The resize-proposal protocol. Verdicts:
 
         granted  — full target reserved (possibly via preemption: lower-
@@ -274,9 +285,19 @@ class FleetArbiter:
         Shrink proposals (target below the current grant) are voluntary
         releases: granted immediately, never below the claim minimum.
         Reservation is bookkeeping-only; the destructive mesh changes happen
-        at ``apply_pending``."""
+        at ``apply_pending``.
+
+        ``pressure`` is the proposer's SLO error-budget burn rate (None
+        when the tenant scales on raw saturation alone): it is recorded on
+        the verdict, remembered per tenant, and breaks ties among
+        same-priority deferred proposals when ``tick`` re-evaluates them —
+        the tenant burning its budget hardest goes first."""
         with self._lock:
+            if pressure is not None:
+                self._pressure[name] = float(pressure)
             verdict = self._propose_locked(name, new_mesh_shape)
+        if pressure is not None:
+            verdict["pressure"] = float(pressure)
         self.monitor.log("fleet", "proposal", vre=name, **{
             k: (list(v) if isinstance(v, tuple) else v)
             for k, v in verdict.items()})
@@ -435,6 +456,7 @@ class FleetArbiter:
             self._occupied.pop(name, None)
             self._deferred.pop(name, None)
             self._queue_wait_s.pop(name, None)
+            self._pressure.pop(name, None)
             for key in [k for k in self.directory.entries()
                         if k.startswith(name + "/")]:
                 self.directory.withdraw(key)
@@ -482,7 +504,8 @@ class FleetArbiter:
                                          victims=victims,
                                          reason="admission_pressure")
             for name in sorted(self._deferred,
-                               key=lambda n: -self._claims[n].priority):
+                               key=lambda n: (-self._claims[n].priority,
+                                              -self._pressure.get(n, 0.0))):
                 shape = self._deferred.pop(name)
                 verdict = self._propose_locked(name, shape)
                 if verdict["verdict"] != "deferred":
@@ -573,6 +596,7 @@ class FleetArbiter:
                 "queued": [q.config.name for q in self._queue],
                 "deferred": {n: list(s) for n, s in self._deferred.items()},
                 "queue_wait_s": dict(self._queue_wait_s),
+                "pressure": dict(self._pressure),
                 "admissions": self.admissions,
                 "preemptions": self.preemptions,
                 "vres": {n: {"state": v.state,

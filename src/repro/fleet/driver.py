@@ -302,6 +302,7 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
                        tick_interval_s: Optional[float] = None,
                        speculate: int = 0,
                        record_dir: Optional[str] = None,
+                       telemetry_port: Optional[int] = None,
                        rng=None) -> dict:
     """The benchmark scenario: ``n_vres`` same-pipeline tenants arrive one
     per phase over one shared pool and burst (a saturating Poisson wave) on
@@ -329,6 +330,12 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
     auto_tick = bool(tick_interval_s) and not static
     if auto_tick:
         arbiter.start_ticker(tick_interval_s)
+    telemetry = None
+    if telemetry_port is not None:
+        # fleet-wide live scrape surface for the duration of the scenario:
+        # tenants appear in /vres as they are admitted and leave on release
+        from repro.observability import fleet_telemetry
+        telemetry = fleet_telemetry(arbiter, port=telemetry_port)
     burst = pool - (n_vres - 1)      # hot grant: rest stay at their minima
     specs = []
     for i in range(n_vres):
@@ -364,6 +371,11 @@ def run_fleet_scenario(n_vres: int = 2, *, devices=None, arch: str = "yi-9b",
                 arbiter.release(cfg.name)
             except KeyError:
                 pass
+        if telemetry is not None:
+            telemetry.stop()
+    if telemetry is not None:
+        report["telemetry"] = {"url": telemetry.url,
+                               "scrapes": telemetry.scrapes}
     report["mode"] = "static" if static else "arbitrated"
     report["pool_devices"] = pool
     if record_dir:

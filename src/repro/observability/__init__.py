@@ -1,22 +1,37 @@
-"""Request-level flight recorder: distributed traces, a queryable record
-store, and trace replay as a benchmark mode.
+"""Observability plane: flight recorder (post-hoc) + live telemetry.
 
 The paper ships an EFK monitoring stack as a first-class microservice
 concern; ``core/monitoring.py`` is its aggregate analogue. This package is
-the *per-request* half (the st4sd-datastore ``reporter`` analogue): every
-request carries a ``TraceContext`` of spans through gateway -> arbiter ->
-replica -> engine, a ``Recorder`` daemon persists one JSONL record per
-finished request to a queryable ``RecordStore``, and ``replay`` re-serves a
-recorded trace as a benchmark workload.
+both per-request and live halves: every request carries a ``TraceContext``
+of spans through gateway -> arbiter -> replica -> engine, a ``Recorder``
+daemon persists one JSONL record per finished request to a queryable
+``RecordStore``, and ``replay`` re-serves a recorded trace as a benchmark
+workload. The *live* half — ``MetricsRegistry`` typed time series with
+Prometheus exposition, an ``SLOEngine`` whose error-budget burn rate drives
+the autoscaler/arbiter, and the ``TelemetryServer`` HTTP surface
+(/metrics, /healthz, /vres) — answers "is VRE Y healthy right now" the way
+the recorder answers "what happened to request X yesterday".
 """
 from repro.observability.tracing import (NULL_TRACE, Span, TraceContext,
                                          null_trace)
 from repro.observability.recorder import (Recorder, RecordStore,
                                           format_span_tree)
 from repro.observability.replay import load_replay, replay_records
+from repro.observability.metrics import (MetricSample, MetricsRegistry,
+                                         render_exposition,
+                                         validate_exposition)
+from repro.observability.slo import SLOEngine, SLOTarget, targets_from_config
+from repro.observability.telemetry import (TelemetryServer, fleet_telemetry,
+                                           replicaset_telemetry,
+                                           vre_telemetry)
 
 __all__ = [
     "NULL_TRACE", "Span", "TraceContext", "null_trace",
     "Recorder", "RecordStore", "format_span_tree",
     "load_replay", "replay_records",
+    "MetricSample", "MetricsRegistry", "render_exposition",
+    "validate_exposition",
+    "SLOEngine", "SLOTarget", "targets_from_config",
+    "TelemetryServer", "fleet_telemetry", "replicaset_telemetry",
+    "vre_telemetry",
 ]

@@ -103,6 +103,10 @@ class Recorder:
             self.drops += 1
             if self.monitor is not None:
                 self.monitor.count(self.name, "record_dropped")
+                # gauge too: the /metrics surface scrapes gauges, so silent
+                # record loss shows up on dashboards, not only in the
+                # end-of-run JSONL summary
+                self.monitor.gauge(self.name, "dropped", float(self.drops))
             return False
 
     def record(self, req, engine=None) -> bool:

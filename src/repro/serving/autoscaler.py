@@ -16,6 +16,7 @@ elasticity levers the platform has:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 import time
 from collections import deque
@@ -45,11 +46,26 @@ class AutoscalerConfig:
 
 class Autoscaler:
     def __init__(self, replicaset, monitor, cfg: AutoscalerConfig,
-                 resize_mesh: Optional[Callable[[], None]] = None):
+                 resize_mesh: Optional[Callable[[], None]] = None,
+                 slo=None):
         self.rs = replicaset
         self.monitor = monitor
         self.cfg = cfg
         self.resize_mesh = resize_mesh
+        # optional repro.observability.slo.SLOEngine: its error-budget burn
+        # rate joins raw saturation as a growth trigger — load counts
+        # *requests*, the SLO measures *time*, and long generations at low
+        # concurrency only show up in the latter
+        self.slo = slo
+        # resize_mesh callables predate the pressure signal (tests pass bare
+        # lambdas): only forward the burn rate to ones that declare it
+        self._resize_takes_pressure = False
+        if resize_mesh is not None:
+            try:
+                self._resize_takes_pressure = "pressure" in \
+                    inspect.signature(resize_mesh).parameters
+            except (TypeError, ValueError):
+                pass
         # bounded: a long-lived control loop appends one entry per tick
         self.decisions = deque(maxlen=1024)
         self._resize_requested = False
@@ -79,9 +95,15 @@ class Autoscaler:
         backlog_per_replica = backlog / n
         self.monitor.gauge(self.rs.name, "prefill_backlog_per_replica",
                            backlog_per_replica)
+        burn = None
+        if self.slo is not None:
+            burn = max((v["burn_rate"]
+                        for v in self.slo.evaluate().values()), default=0.0)
+            self.monitor.gauge(self.rs.name, "slo_burn_rate", burn)
         return {"load_per_replica": load_per_replica, "replicas": n,
                 "latency_p95_s": p95,
-                "prefill_backlog_per_replica": backlog_per_replica}
+                "prefill_backlog_per_replica": backlog_per_replica,
+                "slo_burn_rate": burn}
 
     # -- decision ----------------------------------------------------------
     def evaluate(self) -> str:
@@ -98,6 +120,12 @@ class Autoscaler:
         if self.cfg.scale_up_prefill_tokens is not None:
             hot = hot or (sig["prefill_backlog_per_replica"]
                           > self.cfg.scale_up_prefill_tokens)
+        burn = sig.get("slo_burn_rate")
+        if burn is not None:
+            # the SLO engine's verdict: burning the error budget is
+            # saturation by the user-facing definition, whatever the queue
+            # depth says
+            hot = hot or burn >= self.slo.burn_threshold
         if hot:
             if n < self.cfg.max_replicas:
                 self.rs.scale_to(n + 1)
@@ -111,7 +139,13 @@ class Autoscaler:
                 # granted, shrunk, or deferred — a deferred proposal is
                 # parked with the arbiter (re-evaluated as capacity frees),
                 # so it still counts as this episode's request.
-                verdict = self.resize_mesh()
+                if self._resize_takes_pressure and burn is not None:
+                    # ride the burn rate into the arbiter's proposal
+                    # protocol: arbitration sees how hard the tenant's
+                    # budget is burning, not just that it asked
+                    verdict = self.resize_mesh(pressure=burn)
+                else:
+                    verdict = self.resize_mesh()
                 self._resize_requested = True
                 self._last_action_t = now
                 if isinstance(verdict, dict) and "verdict" in verdict:

@@ -358,6 +358,12 @@ class ServingEngine:
                 break
             r.slot = slot
             r.trace.close("queue_wait", replica=self.name, slot=slot)
+            if self.monitor is not None:
+                # queue-wait is an SLO surface of its own: load gauges count
+                # *requests* waiting, this measures how long they waited —
+                # long generations at low concurrency hurt here first
+                self.monitor.gauge(self.name, "queue_wait_s",
+                                   time.perf_counter() - r.submit_t)
             # chunked admission for prompts longer than one chunk, or ones a
             # prefix cache could serve (>= one chunk boundary); sub-chunk
             # prompts can neither hit nor seed the cache, so they keep the

@@ -139,3 +139,21 @@ def test_records_mode(tmp_path):
     assert report_history.main(["--dir", str(tmp_path),
                                 "--records", path]) == 2
     assert report_history.main([]) == 2
+
+
+def test_records_mode_empty_degrades_gracefully(tmp_path, capsys):
+    """A bench run with the recorder off (or a wiped artifact dir) must not
+    kill the dashboard pipeline: warn, render an empty page, exit 0."""
+    out_html = tmp_path / "records.html"
+    rc = report_history.main(["--records", str(tmp_path / "missing"),
+                              "--out-html", str(out_html)])
+    assert rc == 0
+    assert "warning: no request records" in capsys.readouterr().err
+    page = out_html.read_text()
+    assert "0 requests" in page
+    # stdout (markdown) form likewise exits 0
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert report_history.main(["--records", str(empty)]) == 0
+    out = capsys.readouterr()
+    assert "0 requests" in out.out and "warning" in out.err
